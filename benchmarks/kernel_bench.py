@@ -1,0 +1,49 @@
+"""Kernel micro-benchmarks: jnp reference wall-times on CPU (the Pallas
+paths are TPU-target, interpret-validated — timing them interpreted is
+meaningless) + their roofline-expected TPU times from the analytic model."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import header, row, timeit
+from repro.common.config import V5E
+from repro.kernels.gram.ref import gram_ref
+from repro.kernels.rf_map.ref import rf_map_ref, rf_weights
+from repro.kernels.swa.ref import swa_ref
+
+
+def run() -> None:
+    header("Kernel reference timings + TPU roofline expectations")
+    key = jax.random.PRNGKey(0)
+
+    n, d = 8192, 512
+    a = jax.random.normal(key, (n, d), jnp.float32)
+    g = jax.jit(gram_ref)
+    t = timeit(lambda: jax.block_until_ready(g(a)))
+    flops = 2 * n * d * d
+    tpu_s = max(flops / V5E.peak_flops,
+                (n * d * 4 + d * d * 4) / V5E.hbm_bw)
+    row("kernel/gram_8192x512", t * 1e6,
+        f"cpu_gflops={flops / t / 1e9:.1f} tpu_roofline={tpu_s * 1e6:.0f}us")
+
+    x = jax.random.normal(key, (4096, 440), jnp.float32)
+    w, b = rf_weights(440, 4096, 1.0, 0)
+    f = jax.jit(rf_map_ref)
+    t = timeit(lambda: jax.block_until_ready(f(x, w, b)))
+    flops = 2 * 4096 * 440 * 4096
+    tpu_s = max(flops / V5E.peak_flops,
+                (4096 * 4096 * 4) / V5E.hbm_bw)
+    row("kernel/rf_map_4096x440->4096", t * 1e6,
+        f"tpu_roofline={tpu_s * 1e6:.0f}us")
+
+    q = jax.random.normal(key, (1, 8, 2048, 128), jnp.bfloat16)
+    s = jax.jit(lambda q: swa_ref(q, q, q, 512))
+    t = timeit(lambda: jax.block_until_ready(s(q)))
+    flops = 4 * 8 * 2048 * 512 * 128
+    row("kernel/swa_2048_w512", t * 1e6,
+        f"tpu_roofline={flops / V5E.peak_flops * 1e6:.0f}us")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Render the dry-run roofline table from results/dryrun/*.json
+(EXPERIMENTS.md §Roofline reads this output)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import header, row
+
+
+def run() -> None:
+    for results_dir, label in (("results/dryrun", "baseline"),
+                               ("results/dryrun_opt", "optimized")):
+        header(f"Roofline table ({label}: {results_dir})")
+        files = sorted(glob.glob(os.path.join(results_dir, "*.json")))
+        if not files:
+            print(f"# no dry-run artifacts in {results_dir}; run "
+                  "`python -m repro.launch.dryrun --all` first")
+            continue
+        for path in files:
+            data = json.load(open(path))
+            r = data["roofline"]
+            name = f"{data['arch']}|{data['shape']}|{data['mesh']}"
+            us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+            row(f"roofline[{label}]/{name}", us,
+                f"compute={r['compute_s'] * 1e3:.2f}ms "
+                f"memory={r['memory_s'] * 1e3:.2f}ms "
+                f"collective={r['collective_s'] * 1e3:.2f}ms "
+                f"dominant={r['dominant']} useful={r['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

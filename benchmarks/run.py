@@ -1,0 +1,38 @@
+"""Benchmark harness driver — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table2     # one table
+"""
+import sys
+
+from benchmarks import (
+    fig3_weak_scaling,
+    kernel_bench,
+    roofline_table,
+    table2_cg,
+    table3_transfer,
+    table4_cg_features,
+    table5_svd,
+)
+
+ALL = {
+    "table2": table2_cg.run,
+    "table3": table3_transfer.run,
+    "table4": table4_cg_features.run,
+    "table5": table5_svd.run,
+    "fig3": fig3_weak_scaling.run,
+    "kernels": kernel_bench.run,
+    "roofline": roofline_table.run,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for name in which:
+        ALL[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Table 3: Spark->Alchemist transfer time vs process allocation.
+
+Measured: actual client->engine reshard throughput at CPU scale for growing
+matrices (the TPU-native cost). Modeled: the calibrated socket model over
+the paper's (spark procs x alchemist procs) grid, printed against the
+paper's measured cells.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import header, row, timeit
+from repro.core import AlchemistContext
+from repro.core.costmodel import socket_transfer_seconds
+
+PAPER_GRID = {  # (spark, alchemist) -> seconds (180GB matrix)
+    (2, 20): 580.1, (10, 20): 166.4, (20, 20): 149.5, (30, 20): 163.1,
+    (40, 20): 312.4, (2, 30): 874.9, (10, 30): 198.0, (20, 30): 165.7,
+    (30, 30): 157.6, (2, 40): 1021.6, (10, 40): 222.9, (20, 40): 185.4,
+}
+BYTES_180GB = 2_251_569 * 10_000 * 8
+
+
+def run() -> None:
+    header("Table 3: client->engine transfer times")
+    ac = AlchemistContext(num_workers=1)
+    for mb in (16, 64, 256):
+        n = mb * 1024 * 1024 // 4 // 1024
+        x = np.random.RandomState(0).randn(n, 1024).astype(np.float32)
+
+        def send():
+            al = ac.send_matrix(x)
+            al.free()
+
+        t = timeit(send, warmup=1, iters=3)
+        row(f"table3/measured_reshard_{mb}MB", t * 1e6,
+            f"rate={mb / 1024 / t:.2f}GB/s")
+
+    for (ns, na), paper_s in sorted(PAPER_GRID.items()):
+        m = socket_transfer_seconds(BYTES_180GB, ns, na)
+        row(f"table3/modeled_{ns}x{na}", m * 1e6,
+            f"paper={paper_s}s model={m:.0f}s "
+            f"err={abs(m - paper_s) / paper_s:.0%}")
+
+
+if __name__ == "__main__":
+    run()

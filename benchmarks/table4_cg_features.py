@@ -1,0 +1,59 @@
+"""Paper Table 4: Alchemist CG cost vs number of random features.
+
+The paper's point: per-iteration cost grows linearly in the feature count
+(10k..60k features, engine-side expansion). We measure the same sweep at
+CPU scale (rf_dim 512..4096, engine-side expansion through the rf_map op)
+and check the linearity; the modeled 30-node numbers are printed against
+the paper's.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import header, row, timeit
+from repro.core import AlchemistContext
+from repro.core.costmodel import alchemist_cg_iteration_seconds
+from repro.core.libraries import skylark
+
+PAPER = {  # features -> (iter ms, total s) at 30 nodes
+    10_000: (1490.6, 788.5), 20_000: (2895.8, 1534.8),
+    30_000: (4317.0, 2270.7), 40_000: (5890.4, 3104.2),
+    50_000: (7286.9, 3854.8), 60_000: (8794.9, 4643.7),
+}
+
+N, D, C = 8_192, 440, 16
+ITERS = 20
+
+
+def run() -> None:
+    header("Table 4: CG cost vs feature count (engine-side expansion)")
+    rng = np.random.RandomState(0)
+    x = rng.randn(N, D).astype(np.float32)
+    y = rng.randn(N, C).astype(np.float32)
+    ac = AlchemistContext(num_workers=1)
+    ac.register_library("skylark", skylark)
+    al_x, al_y = ac.send_matrix(x), ac.send_matrix(y)
+
+    measured = {}
+    for rf in (512, 1024, 2048, 4096):
+        def call():
+            ac.call("skylark", "cg_solve", X=al_x, Y=al_y, lam=1e-5,
+                    rf_dim=rf, max_iters=ITERS, tol=0.0)
+
+        t = timeit(call, warmup=1, iters=2) / ITERS
+        measured[rf] = t
+        row(f"table4/measured_iter_rf{rf}", t * 1e6, f"n={N}")
+    # linearity check: t(4096)/t(512) should be ~8 (matvec-dominated)
+    ratio = measured[4096] / measured[512]
+    row("table4/linearity_ratio", 0.0,
+        f"t(4096)/t(512)={ratio:.1f} (ideal 8.0)")
+
+    for feats, (p_iter_ms, p_total_s) in PAPER.items():
+        m = alchemist_cg_iteration_seconds(30, 2_251_569, feats)
+        row(f"table4/modeled_iter_{feats // 1000}k", m * 1e6,
+            f"paper={p_iter_ms}ms model={m * 1e3:.0f}ms "
+            f"err={abs(m * 1e3 - p_iter_ms) / p_iter_ms:.0%}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,89 @@
+"""Paper §4.2 end-to-end: rank-20 truncated SVD of an ocean-temperature-like
+field, three use cases (Table 5) plus the Fig. 3 weak-scaling column
+replication — at CPU scale, with the modeled cluster-scale numbers printed
+alongside the paper's.
+
+    PYTHONPATH=src python examples/ocean_svd.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import AlchemistContext
+from repro.core.costmodel import socket_transfer_seconds
+from repro.core.libraries import elemental, mllib
+from repro.frontend.rowmatrix import RowMatrix
+
+
+def ocean_like(n=16_384, d=512, seed=0):
+    rng = np.random.RandomState(seed)
+    t = np.linspace(0, 67 * 30, n)[:, None]
+    modes = np.stack([np.sin(2 * np.pi * t[:, 0] / p)
+                      for p in (365.0, 182.5, 91.2, 30.4, 3650.0)], axis=1)
+    return (modes @ rng.randn(5, d) + 0.05 * rng.randn(n, d)) \
+        .astype(np.float32)
+
+
+def main():
+    x = ocean_like()
+    k = 20
+    print(f"ocean-like field: {x.shape} ({x.nbytes / 1e6:.0f} MB; the "
+          "paper's is 6,177,583 x 8,096 = 400GB)")
+
+    # use case 1: client-only
+    xm = RowMatrix.from_array(x, 12)
+    t0 = time.perf_counter()
+    sig1, v1, st = mllib.spark_truncated_svd(xm, k)
+    t1 = time.perf_counter() - t0
+    print(f"[case 1] spark-only SVD: {t1:.2f}s "
+          f"({st['bsp_rounds']} BSP rounds)   paper: 553.1s")
+
+    # use case 2: client loads, engine computes
+    ac = AlchemistContext(num_workers=4)
+    ac.register_library("elemental", elemental)
+    t0 = time.perf_counter()
+    al = ac.send_matrix(xm)
+    res = ac.call("elemental", "truncated_svd", A=al, k=k)
+    u = ac.wrap(res["U"]).to_row_matrix()
+    t2 = time.perf_counter() - t0
+    print(f"[case 2] spark-load + alchemist-SVD: {t2:.2f}s measured "
+          f"  paper: 121.9s (4.5x)")
+    print("         (both substrates share this CPU: measured parity is "
+          "expected; the cluster-scale gap comes from the modeled BSP "
+          "overhead, see benchmarks table5)")
+
+    # use case 3: engine loads and computes
+    t0 = time.perf_counter()
+    gen = ac.call("elemental", "random_matrix", rows=x.shape[0],
+                  cols=x.shape[1], seed=3)
+    res3 = ac.call("elemental", "truncated_svd", A=gen["A"], k=k)
+    _ = ac.wrap(res3["U"]).to_row_matrix()
+    t3 = time.perf_counter() - t0
+    print(f"[case 3] alchemist-load + SVD: {t3:.2f}s measured "
+          f"  paper: 69.7s (7.9x)")
+
+    # agreement
+    sig2 = ac.wrap(res["S"]).to_numpy().ravel()
+    print(f"sigma agreement (case1 vs case2): "
+          f"{np.abs(sig1 - sig2).max() / sig1[0]:.2e}")
+
+    # Fig 3: weak scaling by column replication
+    print("\nFig 3 weak scaling (column replication):")
+    for times in (1, 2, 4):
+        h = gen["A"] if times == 1 else ac.call(
+            "elemental", "replicate_cols", A=gen["A"], times=times)["A"]
+        t0 = time.perf_counter()
+        ac.call("elemental", "truncated_svd", A=h, k=k, oversample=12)
+        t = time.perf_counter() - t0
+        print(f"  x{times}: {t:.2f}s -> weak-scaled wall "
+              f"(t/x) = {t / times:.2f}s")
+
+    # modeled 400GB transfer (the paper's dominant case-2 overhead)
+    m = socket_transfer_seconds(6_177_583 * 8_096 * 8, 320, 384)
+    print(f"\nmodeled 400GB socket transfer at paper's allocation: {m:.0f}s "
+          "(paper measured 62.5s)")
+    ac.stop()
+
+
+if __name__ == "__main__":
+    main()

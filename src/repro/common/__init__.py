@@ -1,0 +1,29 @@
+from repro.common.config import (
+    AttentionKind,
+    BlockKind,
+    MeshConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    TrainConfig,
+)
+from repro.common.sharding import (
+    LogicalRules,
+    logical_sharding,
+    logical_spec,
+    with_logical_constraint,
+)
+
+__all__ = [
+    "AttentionKind",
+    "BlockKind",
+    "MeshConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "LogicalRules",
+    "logical_sharding",
+    "logical_spec",
+    "with_logical_constraint",
+]

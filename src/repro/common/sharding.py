@@ -1,0 +1,174 @@
+"""Logical-axis sharding: params/activations carry logical axis names which a
+``LogicalRules`` table maps onto physical mesh axes (MaxText-style).
+
+The same model code therefore lowers on a 1-device CPU test mesh, the 256-chip
+single-pod mesh and the 512-chip multi-pod mesh; only the rules change. All
+mappings are *divisibility-aware*: a mapped mesh axis that does not evenly
+divide the tensor dim is dropped (e.g. batch=1 long-context decode drops the
+'data' sharding on batch; an MQA kv_heads=1 drops 'model' on heads).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, tuple[str, ...]]
+
+
+# Default logical->physical rules for the production meshes.
+# "batch" covers the data-parallel dims; "layers" gives FSDP-style sharding of
+# stacked (scan) parameters; heavy contraction dims go to "model".
+DEFAULT_RULES: dict[str, Axis] = {
+    "batch": ("pod", "data"),        # pod axis dropped automatically if absent
+    "seq": None,
+    # Decode KV caches shard their sequence dim over 'model' (batch already
+    # takes 'data'); attention over the cache then psums over 'model', and a
+    # 32k x many-layer cache fits per-chip HBM even at batch 128.
+    "cache_seq": ("model",),
+    "layers": ("data",),             # FSDP axis for stacked layer params
+    "vocab": ("model",),
+    # 'embed' rides the data axis as a *fallback* FSDP shard: on activations
+    # (batch, seq, embed) the batch dim claims 'data' first so embed stays
+    # unsharded there, but on weight tensors whose layer-stack dim does not
+    # divide the mesh (e.g. 59 MoE layers on 16-way data) the d_model dim
+    # picks up the FSDP axis instead of silently replicating 100s of GB.
+    "embed": ("data",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "kv_lora": ("model",),
+    "experts": ("model",),           # expert-parallel
+    "expert_mlp": None,
+    "qk": None,
+    # attention-score query-position dim: picks up 'model' ONLY when neither
+    # kv_heads nor q-head-groups divided it (e.g. yi-34b's 56 heads / 8 kv on
+    # a 16-way TP axis) — sequence-parallel attention instead of replication
+    "act_seq": ("model",),
+    "state": ("model",),             # recurrent state width (RG-LRU / RWKV)
+    "conv": None,
+    "frames": None,
+}
+
+
+@dataclasses.dataclass
+class LogicalRules:
+    rules: dict[str, Axis]
+    mesh: Mesh
+
+    def _axis_size(self, a: str) -> int:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[a]
+
+    def spec_for(
+        self, shape: Sequence[int], logical: Sequence[Optional[str]],
+        claim_order: Optional[Sequence[int]] = None,
+    ) -> P:
+        """Divisibility-aware PartitionSpec for a concrete shape.
+
+        ``claim_order``: dim indices in the order they may claim mesh axes
+        (default: left to right). Stacked decode caches use it to let batch
+        claim 'data' before the layer-stack dim does.
+        """
+        assert len(shape) == len(logical), (tuple(shape), tuple(logical))
+        used: set[str] = set()
+        result: dict[int, Axis] = {}
+        order = list(claim_order) if claim_order is not None \
+            else list(range(len(shape)))
+        for idx in order:
+            dim, name = shape[idx], logical[idx]
+            result[idx] = self._claim(dim, name, used)
+        return P(*[result[i] for i in range(len(shape))])
+
+    def _claim(self, dim: int, name: Optional[str], used: set) -> Axis:
+        ax = self.rules.get(name) if name is not None else None
+        if ax is None:
+            return None
+        if isinstance(ax, str):
+            ax = (ax,)
+        keep: list[str] = []
+        size = 1
+        for a in ax:
+            if a not in self.mesh.axis_names or a in used:
+                continue
+            asize = self._axis_size(a)
+            if asize > 1 and dim % (size * asize) == 0:
+                keep.append(a)
+                size *= asize
+        used.update(keep)
+        if not keep:
+            return None
+        return keep[0] if len(keep) == 1 else tuple(keep)
+
+    def sharding_for(
+        self, shape: Sequence[int], logical: Sequence[Optional[str]],
+        claim_order: Optional[Sequence[int]] = None,
+    ) -> NamedSharding:
+        return NamedSharding(self.mesh,
+                             self.spec_for(shape, logical, claim_order))
+
+    # Shape-free variants (assume divisibility; used where shapes are known
+    # to be compatible, e.g. documentation/tests).
+    def physical(self, logical: Sequence[Optional[str]]) -> P:
+        fake_shape = [0] * len(logical)  # 0 % n == 0 -> keeps all axes
+        return self.spec_for(fake_shape, logical)
+
+    def sharding(self, logical: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.physical(logical))
+
+
+def make_rules(mesh: Mesh, overrides: Optional[dict[str, Axis]] = None) -> LogicalRules:
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    return LogicalRules(rules=rules, mesh=mesh)
+
+
+# A context-managed registry so layer code can call with_logical_constraint
+# without threading the rules object everywhere.
+_ACTIVE_RULES: list[LogicalRules] = []
+
+
+class use_rules:
+    def __init__(self, rules: LogicalRules):
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVE_RULES.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _ACTIVE_RULES.pop()
+
+
+def active_rules() -> Optional[LogicalRules]:
+    return _ACTIVE_RULES[-1] if _ACTIVE_RULES else None
+
+
+def active_mesh() -> Optional[Mesh]:
+    rules = active_rules()
+    return rules.mesh if rules is not None else None
+
+
+def logical_spec(shape, logical) -> Optional[P]:
+    rules = active_rules()
+    if rules is None:
+        return None
+    return rules.spec_for(shape, logical)
+
+
+def logical_sharding(shape, logical) -> Optional[NamedSharding]:
+    rules = active_rules()
+    if rules is None:
+        return None
+    return rules.sharding_for(shape, logical)
+
+
+def with_logical_constraint(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a sharding constraint if rules are active; identity otherwise."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    spec = rules.spec_for(x.shape, logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

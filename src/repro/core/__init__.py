@@ -1,0 +1,7 @@
+# The paper's primary contribution: the Alchemist offload system —
+# client context + matrix handles + library registry + engine + transfer.
+from repro.core.context import AlchemistContext, AlMatrix
+from repro.core.engine import AlchemistEngine
+from repro.core.handles import MatrixHandle
+
+__all__ = ["AlchemistContext", "AlMatrix", "AlchemistEngine", "MatrixHandle"]

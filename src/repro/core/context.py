@@ -1,0 +1,119 @@
+"""Client-side API — the Alchemist-Client Interface (ACI, §3.1.2/§3.3.2).
+
+Usage mirrors the paper's Fig. 2:
+
+    from repro.core import AlchemistContext, AlMatrix
+    from repro.core.libraries import elemental
+
+    ac = AlchemistContext(num_workers=4)
+    ac.register_library("elemental", elemental)
+    al_a = ac.send(AlMatrix, A)                 # or AlMatrix(ac, A)
+    q, r = ac.call("elemental", "qr", A=al_a.handle)
+    Q = AlMatrix.from_handle(ac, q).to_row_matrix()
+    ac.stop()
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core import protocol, transfer
+from repro.core.engine import AlchemistEngine, make_engine_mesh
+from repro.core.handles import MatrixHandle
+from repro.frontend.rowmatrix import RowMatrix
+
+
+class AlchemistError(RuntimeError):
+    pass
+
+
+class AlchemistContext:
+    """One client session against an engine. Multiple contexts may share an
+    engine (the paper's concurrent Spark applications), each with its own
+    session id and transfer accounting."""
+
+    _SESSIONS = 0
+
+    def __init__(self, num_workers: Optional[int] = None,
+                 engine: Optional[AlchemistEngine] = None):
+        if engine is None:
+            engine = AlchemistEngine(make_engine_mesh(num_workers))
+        self.engine = engine
+        AlchemistContext._SESSIONS += 1
+        self.session = AlchemistContext._SESSIONS
+        self._stopped = False
+
+    # ---- library registration ----
+    def register_library(self, name: str, module) -> None:
+        self._check_alive()
+        self.engine.load_library(name, module)
+
+    # ---- data movement ----
+    def send_matrix(self, matrix, name: Optional[str] = None) -> "AlMatrix":
+        self._check_alive()
+        handle, rec = transfer.to_engine(self.engine, matrix, name=name)
+        return AlMatrix(self, handle, last_transfer=rec)
+
+    def fetch(self, handle: MatrixHandle, num_partitions: int = 8) -> RowMatrix:
+        self._check_alive()
+        rm, _ = transfer.to_client(self.engine, handle, num_partitions)
+        return rm
+
+    # ---- routine invocation (serialized command channel) ----
+    def call(self, library: str, routine: str, **kwargs) -> dict[str, Any]:
+        self._check_alive()
+        args = {
+            k: (v.handle if isinstance(v, AlMatrix) else v)
+            for k, v in kwargs.items()
+        }
+        wire = protocol.encode_command(protocol.Command(
+            library=library, routine=routine, args=args, session=self.session))
+        result = protocol.decode_result(self.engine.run(wire))
+        if result.error:
+            raise AlchemistError(result.error)
+        out = dict(result.values)
+        out["_elapsed"] = result.elapsed
+        return out
+
+    def wrap(self, handle: MatrixHandle) -> "AlMatrix":
+        return AlMatrix(self, handle)
+
+    def stop(self) -> None:
+        self._stopped = True
+
+    def _check_alive(self):
+        if self._stopped:
+            raise AlchemistError("AlchemistContext is stopped")
+
+
+class AlMatrix:
+    """Client-side proxy for an engine-resident distributed matrix."""
+
+    def __init__(self, ac: AlchemistContext, data_or_handle,
+                 last_transfer=None):
+        self.ac = ac
+        if isinstance(data_or_handle, MatrixHandle):
+            self.handle = data_or_handle
+        else:
+            al = ac.send_matrix(data_or_handle)
+            self.handle = al.handle
+            last_transfer = al.last_transfer
+        self.last_transfer = last_transfer
+
+    @staticmethod
+    def from_handle(ac: AlchemistContext, handle: MatrixHandle) -> "AlMatrix":
+        return AlMatrix(ac, handle)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.handle.shape
+
+    def to_row_matrix(self, num_partitions: int = 8) -> RowMatrix:
+        return self.ac.fetch(self.handle, num_partitions)
+
+    def to_numpy(self) -> np.ndarray:
+        return self.to_row_matrix().collect()
+
+    def free(self) -> None:
+        self.ac.engine.free(self.handle)

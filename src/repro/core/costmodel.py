@@ -1,0 +1,111 @@
+"""Calibrated cost models of the paper's measured overheads.
+
+This repo runs on a single CPU host, so cluster-scale wall-times cannot be
+measured. Following the paper's own accounting (transfer vs compute,
+Tables 2-5), we model:
+
+  * client->engine transfer time as a function of (bytes, client procs,
+    engine procs), calibrated to Table 3 (2,251,569 x 10,000 fp64 ~ 180GB);
+  * Spark's per-iteration BSP overhead vs Alchemist's, calibrated to
+    Table 2 (CG on the 10k-feature TIMIT system);
+  * on the TPU adaptation, the same role is played by the client-mesh ->
+    engine-mesh reshard: bytes / (ICI/DCN bandwidth), reported separately.
+
+All benchmark tables print measured-small-scale numbers AND these modeled
+cluster-scale numbers side by side with the paper's measurements, so the
+calibration error is always visible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+GB = 1e9
+
+# ---- Table 3 calibration (socket transfer, Cori Phase 1) ----
+# Effective aggregate rate grows sublinearly with the narrower side of the
+# bridge (shared NICs): rate ~ C * min(procs)^P GB/s. Fit to the paper's
+# (2,20)->580.1s and (20,20)->149.5s cells of Table 3 (180GB matrix); the
+# remaining cells scatter +/-2x around this due to network load (the paper
+# itself reports 3-run averages with large variability).
+_RATE_C = 0.206
+_RATE_P = 0.588
+_IMBALANCE = 0.0
+
+# ---- Table 2 calibration (per-iteration CG cost, 10k features) ----
+# t_iter(nodes) = A / nodes + B   [seconds], fit to the paper's 20/30/40-node
+# measurements; scaled linearly in FLOPs for other problem sizes.
+_SPARK_A, _SPARK_B = 1388.0, 5.9          # Spark BSP (scheduler+task overhead)
+_ALCH_A, _ALCH_B = 52.0, 0.2              # Alchemist (C+MPI via Elemental)
+_CAL_FEATURES = 10_000                    # calibration problem size
+_CAL_ROWS = 2_251_569
+
+# ---- TPU adaptation constants ----
+ICI_BW = 50e9                             # bytes/s per link
+DCN_BW = 25e9                             # bytes/s per host, cross-slice
+
+
+def socket_transfer_seconds(nbytes: int, client_procs: int,
+                            engine_procs: int) -> float:
+    """Modeled Spark->Alchemist TCP transfer time (paper Table 3)."""
+    lo, hi = sorted((max(1, client_procs), max(1, engine_procs)))
+    rate = _RATE_C * lo ** _RATE_P
+    penalty = 1.0 + _IMBALANCE * (hi / lo - 1.0)
+    return nbytes / GB / rate * penalty
+
+
+def spark_cg_iteration_seconds(nodes: int, rows: int, features: int) -> float:
+    """Modeled Spark per-CG-iteration cost (paper Table 2 calibration)."""
+    scale = (rows * features) / (_CAL_ROWS * _CAL_FEATURES)
+    return (_SPARK_A / nodes + _SPARK_B) * scale
+
+
+def alchemist_cg_iteration_seconds(nodes: int, rows: int,
+                                   features: int) -> float:
+    """Modeled Alchemist (C+MPI) per-CG-iteration cost (Table 2/4)."""
+    scale = (rows * features) / (_CAL_ROWS * _CAL_FEATURES)
+    return (_ALCH_A / nodes + _ALCH_B) * scale
+
+
+def reshard_transfer_seconds(nbytes: int, chips: int,
+                             cross_pod: bool = False) -> float:
+    """TPU-native analogue: client-mesh -> engine-mesh re-layout cost."""
+    bw = DCN_BW if cross_pod else ICI_BW
+    return nbytes / (chips * bw)
+
+
+@dataclasses.dataclass
+class TransferRecord:
+    nbytes: int
+    direction: str                # "to_engine" | "to_client"
+    modeled_socket_s: float
+    modeled_reshard_s: float
+
+
+class TransferLog:
+    """Accumulates every boundary crossing for the EXPERIMENTS tables."""
+
+    def __init__(self, client_procs: int = 20, engine_procs: int = 20,
+                 chips: int = 256):
+        self.client_procs = client_procs
+        self.engine_procs = engine_procs
+        self.chips = chips
+        self.records: list[TransferRecord] = []
+
+    def record(self, nbytes: int, direction: str) -> TransferRecord:
+        rec = TransferRecord(
+            nbytes=int(nbytes),
+            direction=direction,
+            modeled_socket_s=socket_transfer_seconds(
+                nbytes, self.client_procs, self.engine_procs),
+            modeled_reshard_s=reshard_transfer_seconds(nbytes, self.chips),
+        )
+        self.records.append(rec)
+        return rec
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(r.nbytes for r in self.records)
+
+    @property
+    def total_socket_seconds(self) -> float:
+        return sum(r.modeled_socket_s for r in self.records)

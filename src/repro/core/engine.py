@@ -1,0 +1,107 @@
+"""The Alchemist engine: the high-performance side of the bridge.
+
+The engine owns (a) a *worker mesh* — the analogue of the MPI processes
+hosting Elemental — and (b) the handle table mapping MatrixHandle IDs to
+engine-resident distributed arrays (2D block sharding = Elemental
+DistMatrix). Library routines run on the engine mesh via shard_map/pjit,
+driven through the protocol layer so only serializable values cross.
+
+On this CPU container the worker mesh is however many devices exist (1);
+the same code lowers onto a real multi-chip engine mesh unchanged — the
+engine is given its mesh at construction, exactly like Alchemist being
+launched on "a user-specified number of nodes" (§3.1.1).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import protocol
+from repro.core.costmodel import TransferLog
+from repro.core.handles import MatrixHandle
+
+
+def make_engine_mesh(num_workers: Optional[int] = None) -> Mesh:
+    devices = jax.devices()
+    n = min(num_workers or len(devices), len(devices))
+    return Mesh(np.array(devices[:n]).reshape(n), ("workers",))
+
+
+class LibraryNotRegistered(KeyError):
+    pass
+
+
+class AlchemistEngine:
+    """Server side: handle table + library registry + routine dispatch."""
+
+    def __init__(self, mesh: Optional[Mesh] = None,
+                 transfer_log: Optional[TransferLog] = None):
+        self.mesh = mesh if mesh is not None else make_engine_mesh()
+        self.num_workers = self.mesh.devices.size
+        self._store: dict[int, jax.Array] = {}
+        self._libraries: dict[str, dict[str, Any]] = {}
+        self.transfer_log = transfer_log or TransferLog(
+            engine_procs=self.num_workers)
+
+    # ---- library registry (the ALI layer, §3.1.3) ----
+    def load_library(self, name: str, module) -> None:
+        """``module`` must export ROUTINES: dict[str, callable]. Mirrors
+        dynamically dlopen()ing an ALI shared object."""
+        routines = getattr(module, "ROUTINES", None)
+        if not isinstance(routines, dict):
+            raise TypeError(f"library {name!r} exports no ROUTINES dict")
+        self._libraries[name] = routines
+
+    def libraries(self) -> list[str]:
+        return sorted(self._libraries)
+
+    # ---- handle table ----
+    def put(self, array: jax.Array, name: Optional[str] = None) -> MatrixHandle:
+        handle = MatrixHandle.fresh(array.shape, array.dtype, name=name)
+        self._store[handle.id] = array
+        return handle
+
+    def get(self, handle: MatrixHandle) -> jax.Array:
+        return self._store[handle.id]
+
+    def free(self, handle: MatrixHandle) -> None:
+        self._store.pop(handle.id, None)
+
+    def resident_bytes(self) -> int:
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in self._store.values())
+
+    # ---- 2D engine layout (Elemental DistMatrix analogue) ----
+    def dist_sharding(self, shape) -> NamedSharding:
+        if len(shape) >= 1 and shape[0] % self.num_workers == 0:
+            return NamedSharding(self.mesh, P("workers",
+                                              *(None,) * (len(shape) - 1)))
+        return NamedSharding(self.mesh, P(*(None,) * len(shape)))
+
+    # ---- dispatch (driver<->driver command channel) ----
+    def run(self, wire_command: bytes) -> bytes:
+        """Execute one serialized Command; returns a serialized Result."""
+        cmd = protocol.decode_command(wire_command)
+        lib = self._libraries.get(cmd.library)
+        if lib is None:
+            return protocol.encode_result(protocol.Result(
+                values={}, error=f"library {cmd.library!r} not registered"))
+        fn = lib.get(cmd.routine)
+        if fn is None:
+            return protocol.encode_result(protocol.Result(
+                values={}, error=f"routine {cmd.routine!r} not in "
+                                 f"{cmd.library!r}"))
+        t0 = time.perf_counter()
+        try:
+            values = fn(self, **cmd.args)
+        except Exception as e:  # surface engine-side failures to the client
+            return protocol.encode_result(protocol.Result(
+                values={}, error=f"{type(e).__name__}: {e}"))
+        elapsed = time.perf_counter() - t0
+        return protocol.encode_result(protocol.Result(values=values,
+                                                      elapsed=elapsed))

@@ -1,0 +1,43 @@
+"""Matrix handles — the JAX analogue of the paper's ``AlMatrix`` proxies.
+
+A handle names an engine-resident distributed matrix by ID. Handles are what
+library routines consume and produce, so chained calls (e.g. random-feature
+expansion followed by CG) compose entirely engine-side: data is only shipped
+back to the client when it explicitly materializes the handle
+(``AlMatrix.to_row_matrix()`` / ``AlchemistContext.fetch``), mirroring
+``toIndexedRowMatrix()`` in the paper (§3.3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+_COUNTER = itertools.count(1)
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixHandle:
+    id: int
+    shape: tuple[int, ...]
+    dtype: str
+    layout: str = "block2d"        # engine-side layout tag
+    name: Optional[str] = None
+
+    @staticmethod
+    def fresh(shape, dtype, layout="block2d", name=None) -> "MatrixHandle":
+        return MatrixHandle(id=next(_COUNTER), shape=tuple(int(s) for s in shape),
+                            dtype=str(dtype), layout=layout, name=name)
+
+    @property
+    def num_elements(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def nbytes(self) -> int:
+        import numpy as np
+
+        return self.num_elements * np.dtype(self.dtype).itemsize

@@ -1,0 +1,92 @@
+"""Driver<->driver wire protocol (the paper's socket message layer, §3.1.2).
+
+Commands and results cross the client/engine boundary as msgpack-serialized
+messages; distributed matrices never do (they move through the transfer
+layer and are referenced by handle ID). Running every routine call through
+an explicit encode/decode keeps the bridge honest: only picklable scalars,
+strings and handle IDs can cross, exactly like the real system's serialized
+input parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import msgpack
+
+_HANDLE_TAG = "__handle__"
+
+
+@dataclasses.dataclass(frozen=True)
+class Command:
+    library: str
+    routine: str
+    args: dict[str, Any]
+    session: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Result:
+    values: dict[str, Any]
+    elapsed: float = 0.0
+    error: str = ""
+
+
+def _pack_value(v):
+    from repro.core.handles import MatrixHandle
+
+    if isinstance(v, MatrixHandle):
+        return {_HANDLE_TAG: [v.id, list(v.shape), v.dtype, v.layout, v.name]}
+    if isinstance(v, (list, tuple)):
+        return [_pack_value(x) for x in v]
+    if isinstance(v, dict):
+        return {k: _pack_value(x) for k, x in v.items()}
+    if isinstance(v, (int, float, str, bool, bytes)) or v is None:
+        return v
+    raise TypeError(
+        f"cannot serialize {type(v).__name__} across the Alchemist boundary; "
+        "only scalars, strings and MatrixHandles may cross (send matrices "
+        "through the transfer layer)")
+
+
+def _unpack_value(v):
+    from repro.core.handles import MatrixHandle
+
+    if isinstance(v, dict):
+        if _HANDLE_TAG in v:
+            hid, shape, dtype, layout, name = v[_HANDLE_TAG]
+            return MatrixHandle(id=hid, shape=tuple(shape), dtype=dtype,
+                                layout=layout, name=name)
+        return {k: _unpack_value(x) for k, x in v.items()}
+    if isinstance(v, list):
+        return [_unpack_value(x) for x in v]
+    return v
+
+
+def encode_command(cmd: Command) -> bytes:
+    return msgpack.packb({
+        "library": cmd.library,
+        "routine": cmd.routine,
+        "args": _pack_value(cmd.args),
+        "session": cmd.session,
+    })
+
+
+def decode_command(data: bytes) -> Command:
+    d = msgpack.unpackb(data)
+    return Command(library=d["library"], routine=d["routine"],
+                   args=_unpack_value(d["args"]), session=d["session"])
+
+
+def encode_result(res: Result) -> bytes:
+    return msgpack.packb({
+        "values": _pack_value(res.values),
+        "elapsed": res.elapsed,
+        "error": res.error,
+    })
+
+
+def decode_result(data: bytes) -> Result:
+    d = msgpack.unpackb(data)
+    return Result(values=_unpack_value(d["values"]), elapsed=d["elapsed"],
+                  error=d["error"])

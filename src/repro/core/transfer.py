@@ -1,0 +1,46 @@
+"""The transfer layer: client row-partitioned matrices <-> engine-resident
+distributed matrices (the paper's TCP-socket + re-layout path, §3.2).
+
+On a TPU system both "sides" are device meshes, so the socket send becomes
+an explicit re-layout (device_put to the engine sharding); the cost model
+records what the same movement would cost over the paper's sockets and over
+ICI/DCN, feeding the EXPERIMENTS transfer tables.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import TransferRecord
+from repro.core.engine import AlchemistEngine
+from repro.core.handles import MatrixHandle
+from repro.frontend.rowmatrix import RowMatrix
+
+
+def to_engine(engine: AlchemistEngine, matrix, name: Optional[str] = None
+              ) -> tuple[MatrixHandle, TransferRecord]:
+    """Ship a client matrix into the engine: row-layout -> engine 2D layout.
+
+    Accepts a RowMatrix (the IndexedRowMatrix analogue) or a plain array.
+    Returns (handle, transfer record).
+    """
+    if isinstance(matrix, RowMatrix):
+        arr = matrix.collect()
+    else:
+        arr = jnp.asarray(matrix)
+    arr = jax.device_put(arr, engine.dist_sharding(arr.shape))
+    rec = engine.transfer_log.record(
+        int(np.prod(arr.shape)) * arr.dtype.itemsize, "to_engine")
+    return engine.put(arr, name=name), rec
+
+
+def to_client(engine: AlchemistEngine, handle: MatrixHandle,
+              num_partitions: int = 8) -> tuple[RowMatrix, TransferRecord]:
+    """Materialize an engine matrix back on the client as a RowMatrix."""
+    arr = engine.get(handle)
+    rec = engine.transfer_log.record(
+        int(np.prod(arr.shape)) * arr.dtype.itemsize, "to_client")
+    return RowMatrix.from_array(np.asarray(arr), num_partitions), rec

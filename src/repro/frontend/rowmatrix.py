@@ -1,0 +1,83 @@
+"""RowMatrix: the IndexedRowMatrix analogue — a dense matrix stored as
+row-block partitions of an RDD on the client side."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.frontend.rdd import RDD
+
+
+class RowMatrix:
+    def __init__(self, rdd: RDD, num_rows: int, num_cols: int,
+                 row_offsets: Optional[list[int]] = None):
+        self.rdd = rdd
+        self.num_rows = num_rows
+        self.num_cols = num_cols
+        self.row_offsets = row_offsets
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.num_rows, self.num_cols)
+
+    @property
+    def nbytes(self) -> int:
+        return self.num_rows * self.num_cols * 8
+
+    # ---- construction ----
+    @staticmethod
+    def from_array(arr: np.ndarray, num_partitions: int = 8) -> "RowMatrix":
+        arr = np.asarray(arr)
+        num_partitions = max(1, min(num_partitions, arr.shape[0]))
+        blocks = np.array_split(arr, num_partitions, axis=0)
+
+        def compute(i):
+            return blocks[i]
+
+        rdd = RDD(num_partitions, compute, (), "from_array").cache()
+        ncols = arr.shape[1] if arr.ndim > 1 else 1
+        return RowMatrix(rdd, arr.shape[0], ncols)
+
+    @staticmethod
+    def random(num_rows: int, num_cols: int, num_partitions: int = 8,
+               seed: int = 0, scale: float = 1.0) -> "RowMatrix":
+        """Lazily-generated random matrix; each partition is reproducible
+        from (seed, partition index) — lineage in its purest form."""
+        bounds = np.linspace(0, num_rows, num_partitions + 1).astype(int)
+
+        def compute(i):
+            rng = np.random.RandomState(seed + 7919 * i)
+            return scale * rng.randn(bounds[i + 1] - bounds[i],
+                                     num_cols)
+
+        rdd = RDD(num_partitions, compute, (), "random")
+        return RowMatrix(rdd, num_rows, num_cols, list(bounds))
+
+    # ---- client-side ops (the "pure Spark" substrate) ----
+    def map_rows(self, fn: Callable[[np.ndarray], np.ndarray]) -> "RowMatrix":
+        rdd = self.rdd.map_partitions(fn, "map_rows")
+        first = fn(self.rdd.partition(0))
+        return RowMatrix(rdd, self.num_rows, first.shape[1])
+
+    def collect(self) -> np.ndarray:
+        return np.concatenate(self.rdd.collect(), axis=0)
+
+    def gram_times(self, w: np.ndarray) -> np.ndarray:
+        """(X^T X) w computed partition-by-partition — one BSP round of the
+        Spark CG baseline (treeAggregate of per-partition X_i^T (X_i w))."""
+        out = np.zeros((self.num_cols, *w.shape[1:]), dtype=w.dtype)
+        for i in range(self.rdd.num_partitions):
+            xi = self.rdd.partition(i)
+            out += xi.T @ (xi @ w)
+        return out
+
+    def t_times(self, y_blocks: "RowMatrix") -> np.ndarray:
+        """X^T Y, both row-partitioned identically."""
+        out = None
+        for i in range(self.rdd.num_partitions):
+            xi = self.rdd.partition(i)
+            yi = y_blocks.rdd.partition(i)
+            acc = xi.T @ yi
+            out = acc if out is None else out + acc
+        return out

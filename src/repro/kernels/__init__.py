@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the paper's compute hot spots:
+#   gram   — blocked A^T A (Lanczos/CG matvec substrate)
+#   rf_map — fused random-feature expansion cos(XW + b)
+#   swa    — sliding-window flash attention (recurrentgemma / qwen3-sw)
+# Each package: kernel (pl.pallas_call + BlockSpec), ops (jit wrapper with
+# jnp fallback), ref (pure-jnp oracle used by the allclose test sweeps).

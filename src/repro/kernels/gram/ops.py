@@ -1,0 +1,29 @@
+"""jit'd public wrapper for the Gram kernel: padding, dtype handling, and a
+jnp fallback (the default on this CPU container; the Pallas path is
+validated in interpret mode by the test sweeps and is the TPU target)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.gram.gram import gram_pallas
+from repro.kernels.gram.ref import gram_ref
+
+
+def _pad_to(x, m, axis):
+    rem = x.shape[axis] % m
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, m - rem)
+    return jnp.pad(x, pad)
+
+
+def gram(a: jnp.ndarray, *, use_pallas: bool = False, bm: int = 512,
+         bn: int = 256, interpret: bool = True) -> jnp.ndarray:
+    """G = A^T A (fp32 accumulation)."""
+    if not use_pallas:
+        return gram_ref(a)
+    d = a.shape[1]
+    ap = _pad_to(_pad_to(a, bm, 0), bn, 1)
+    g = gram_pallas(ap, bm=bm, bn=bn, interpret=interpret)
+    return g[:d, :d]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the blocked Gram kernel."""
+import jax.numpy as jnp
+
+
+def gram_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """G = A^T A in fp32."""
+    af = a.astype(jnp.float32)
+    return af.T @ af

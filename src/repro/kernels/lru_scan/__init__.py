@@ -1,0 +1,1 @@
+from repro.kernels.lru_scan.ops import lru_scan

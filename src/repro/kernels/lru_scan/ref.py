@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the gated linear recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def lru_scan_ref(a: jnp.ndarray, b: jnp.ndarray,
+                 h0: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + b_t, per channel. a, b: (B, S, W); h0: (B, W).
+    Returns all states (B, S, W) fp32 (associative parallel scan)."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    bf = bf.at[:, 0].add(af[:, 0] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    return hs

@@ -1,0 +1,1 @@
+from repro.kernels.normal_matvec.ops import normal_matvec

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the fused normal-equations matvec."""
+import jax.numpy as jnp
+
+
+def normal_matvec_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """w -> X^T (X w), fp32. x: (n, d), w: (d, c)."""
+    xf = x.astype(jnp.float32)
+    return xf.T @ (xf @ w.astype(jnp.float32))

@@ -1,0 +1,1 @@
+from repro.kernels.rf_map.ops import rf_map

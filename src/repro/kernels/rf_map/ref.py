@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the random-feature map."""
+import jax
+import jax.numpy as jnp
+
+
+def rf_weights(d: int, rf_dim: int, bandwidth: float, seed: int):
+    """Rahimi-Recht RBF random features: W ~ N(0, 1/bw^2), b ~ U[0, 2pi)."""
+    kw, kb = jax.random.split(jax.random.PRNGKey(seed))
+    w = jax.random.normal(kw, (d, rf_dim), jnp.float32) / bandwidth
+    b = jax.random.uniform(kb, (rf_dim,), jnp.float32, 0.0, 2.0 * jnp.pi)
+    return w, b
+
+
+def rf_map_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Z = sqrt(2/D) cos(X W + b), fp32."""
+    d_out = w.shape[1]
+    z = x.astype(jnp.float32) @ w.astype(jnp.float32) + b
+    return jnp.sqrt(2.0 / d_out) * jnp.cos(z)

@@ -1,0 +1,1 @@
+from repro.kernels.swa.ops import swa_attention

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for sliding-window causal attention."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def swa_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            window: int) -> jnp.ndarray:
+    """q,k,v: (B, H, S, D). Causal attention restricted to keys within
+    (pos - window, pos]. fp32 softmax."""
+    b, h, s, d = q.shape
+    scale = d ** -0.5
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - window)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)

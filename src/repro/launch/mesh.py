@@ -1,0 +1,26 @@
+"""Production mesh construction. A FUNCTION, not a module-level constant, so
+importing this module never touches jax device state."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.common.sharding import LogicalRules, make_rules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for CI-scale dry-run validation (subprocess tests)."""
+    return jax.make_mesh(shape, axes)
+
+
+def production_rules(*, multi_pod: bool = False,
+                     overrides: Optional[dict] = None) -> LogicalRules:
+    return make_rules(make_production_mesh(multi_pod=multi_pod),
+                      overrides=overrides)

@@ -1,0 +1,282 @@
+"""Roofline accounting: parse the compiled (post-SPMD) HLO for collective
+traffic, combine with cost_analysis FLOPs/bytes and hardware constants, and
+compute analytic MODEL_FLOPS (6ND-style, per-architecture) to expose how
+much compiled compute is useful.
+
+XLA's HloCostAnalysis counts a while-loop body once (it does not multiply by
+trip count), so for scan-over-layers models the compiled FLOPs reported by
+cost_analysis systematically undercount; the analytic estimate is therefore
+the primary compute-term input and both numbers are recorded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.common.config import (
+    BlockKind,
+    ModelConfig,
+    ShapeConfig,
+    V5E,
+    HardwareSpec,
+)
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\()?((?:bf16|f32|f16|s32|u32|s8|u8|f64|pred)\[[^\]]*\])[^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|f64|pred)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "f64": 8, "pred": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_by_kind(hlo_text: str) -> dict[str, int]:
+    """Per-device bytes moved through each collective kind, summed over ops.
+
+    Conservative accounting: an op's traffic is the byte size of its result
+    shape(s) (per-device, post-SPMD). '-start' ops are counted; their
+    '-done' twins are not (they repeat the shape).
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_txt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs (per whole step, all chips combined)
+# ---------------------------------------------------------------------------
+def _layer_flops_per_token(cfg: ModelConfig, kind: BlockKind, use_moe: bool,
+                           ctx: float) -> float:
+    """Forward FLOPs per token for one layer; ctx = average attended length."""
+    d = cfg.d_model
+    h, k, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    f = 0.0
+    if kind in (BlockKind.ATTENTION, BlockKind.LOCAL_ATTENTION):
+        f += 2 * d * (h * dh + 2 * k * dh)           # qkv proj
+        f += 2 * 2 * ctx * h * dh                    # scores + context
+        f += 2 * h * dh * d                          # output proj
+    elif kind == BlockKind.MLA:
+        r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+        dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+        if qr:
+            f += 2 * (d * qr + qr * h * (dn + dr))
+        else:
+            f += 2 * d * h * (dn + dr)
+        f += 2 * d * (r + dr)                        # latent + rope key
+        f += 2 * r * h * (dn + dv)                   # up-projections
+        f += 2 * 2 * ctx * h * (dn + dr)             # scores(+rope) + context
+        f += 2 * h * dv * d                          # output proj
+    elif kind == BlockKind.RECURRENT:
+        w = cfg.lru_width or d
+        f += 2 * d * w * 2                           # in / gate proj
+        f += 2 * w * w * 2                           # recurrence gates
+        f += 2 * cfg.conv1d_width * w                # depthwise conv
+        f += 10 * w                                  # elementwise recurrence
+        f += 2 * w * d                               # out proj
+    elif kind == BlockKind.RWKV:
+        dh_r = cfg.rwkv_head_dim
+        f += 2 * d * d * 5                           # r,k,v,g,out projections
+        f += 4 * 2 * d * dh_r                        # wkv state update+readout
+        f += 2 * d * cfg.d_ff * 2 + 2 * d * d        # channel mix (+gate)
+    # FFN
+    if use_moe and cfg.moe is not None:
+        m = cfg.moe
+        active = m.top_k + m.num_shared_experts
+        f += 2 * d * m.expert_ff * 3 * active
+        f += 2 * d * m.num_experts                   # router
+    elif kind != BlockKind.RWKV:                     # rwkv owns its ffn
+        f += 2 * d * cfg.d_ff * (3 if cfg.glu else 2)
+    return f
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic step FLOPs (forward; x3 for training fwd+bwd)."""
+    s = shape.seq_len
+    b = shape.global_batch
+    decode = shape.is_decode
+    n_tokens = b * (1 if decode else (s - (cfg.prefix_len or 0)
+                                      if cfg.prefix_len else s))
+    if cfg.prefix_len and not decode:
+        n_tokens = b * s                            # prefix tokens also flow
+
+    kinds = cfg.block_kinds()
+    nd = cfg.moe.first_dense_layers if cfg.moe else 0
+    total = 0.0
+    for i, kind in enumerate(kinds):
+        if decode:
+            ctx = min(cfg.sliding_window, s) if kind == BlockKind.LOCAL_ATTENTION else s
+        else:
+            ctx = min(cfg.sliding_window, s / 2) if kind == BlockKind.LOCAL_ATTENTION else s / 2
+        use_moe = cfg.moe is not None and i >= nd
+        total += n_tokens * _layer_flops_per_token(cfg, kind, use_moe, ctx)
+    # unembed (+embed gather is negligible)
+    total += 2 * n_tokens * cfg.d_model * cfg.vocab_size
+    # whisper encoder
+    if cfg.is_encdec:
+        enc_d = cfg.encoder_d_model or cfg.d_model
+        enc_tokens = b * cfg.encoder_seq
+        per = (2 * enc_d * 4 * enc_d                 # qkv+o (h*dh = d)
+               + 2 * 2 * (cfg.encoder_seq / 2) * enc_d
+               + 2 * enc_d * cfg.d_ff * (3 if cfg.glu else 2))
+        total += enc_tokens * per * cfg.encoder_layers
+    if shape.mode == "train":
+        total *= 3.0                                 # fwd + bwd
+    return total
+
+
+def cache_bytes(cfg: ModelConfig, shape: ShapeConfig,
+                dtype_bytes: int = 2) -> float:
+    """Total decode-state bytes (all layers, global batch)."""
+    b, s = shape.global_batch, shape.seq_len
+    total = 0.0
+    for kind in cfg.block_kinds():
+        if kind == BlockKind.ATTENTION:
+            total += b * s * cfg.num_kv_heads * cfg.resolved_head_dim \
+                * 2 * dtype_bytes
+        elif kind == BlockKind.LOCAL_ATTENTION:
+            t = min(cfg.sliding_window, s)
+            total += b * t * cfg.num_kv_heads * cfg.resolved_head_dim \
+                * 2 * dtype_bytes
+        elif kind == BlockKind.MLA:
+            total += b * s * (cfg.kv_lora_rank + cfg.rope_head_dim) \
+                * dtype_bytes
+        elif kind == BlockKind.RECURRENT:
+            w = cfg.lru_width or cfg.d_model
+            total += b * w * 4 * (1 + cfg.conv1d_width - 1)
+        elif kind == BlockKind.RWKV:
+            h = cfg.d_model // cfg.rwkv_head_dim
+            total += b * (h * cfg.rwkv_head_dim ** 2 + 2 * cfg.d_model) * 4
+    if cfg.is_encdec:
+        enc_d = cfg.encoder_d_model or cfg.d_model
+        total += cfg.num_layers * b * cfg.encoder_seq * enc_d * 2 \
+            * dtype_bytes
+    return total
+
+
+def analytic_decode_bytes_per_chip(cfg: ModelConfig, shape: ShapeConfig,
+                                   chips: int,
+                                   param_bytes: int = 2) -> float:
+    """TPU-expected HBM traffic for one decode step: read every (sharded)
+    parameter once + read the whole cache + write the updated cache slot
+    (with buffer donation the write is one token, counted as cache/S).
+    Cross-checks the CPU-backend 'bytes accessed', which inflates decode by
+    materializing f32 copies of bf16 dot operands (native on the MXU)."""
+    pc = param_count(cfg) * param_bytes
+    cb = cache_bytes(cfg, shape)
+    return (pc + cb * (1.0 + 1.0 / max(shape.seq_len, 1))) / chips
+
+
+def param_count(cfg: ModelConfig) -> float:
+    """Approximate parameter count (for 6ND cross-checks)."""
+    kinds = cfg.block_kinds()
+    nd = cfg.moe.first_dense_layers if cfg.moe else 0
+    d = cfg.d_model
+    total = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    for i, kind in enumerate(kinds):
+        use_moe = cfg.moe is not None and i >= nd
+        h, k, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+        if kind in (BlockKind.ATTENTION, BlockKind.LOCAL_ATTENTION):
+            total += d * dh * (h + 2 * k) + h * dh * d
+        elif kind == BlockKind.MLA:
+            r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+            dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+            total += (d * qr + qr * h * (dn + dr)) if qr else d * h * (dn + dr)
+            total += d * (r + dr) + r * h * (dn + dv) + h * dv * d
+        elif kind == BlockKind.RECURRENT:
+            w = cfg.lru_width or d
+            total += 2 * d * w + 2 * w * w + w * d
+        elif kind == BlockKind.RWKV:
+            total += 5 * d * d + 2 * d * cfg.d_ff + d * d
+        if cfg.moe is not None and use_moe:
+            m = cfg.moe
+            total += m.num_experts * 3 * d * m.expert_ff
+            total += m.num_shared_experts * 3 * d * m.expert_ff + d * m.num_experts
+        elif kind != BlockKind.RWKV:
+            total += d * cfg.d_ff * (3 if cfg.glu else 2)
+    if cfg.is_encdec:
+        enc_d = cfg.encoder_d_model or cfg.d_model
+        total += cfg.encoder_layers * (4 * enc_d * enc_d
+                                       + enc_d * cfg.d_ff * (3 if cfg.glu else 2))
+        # cross attention in every decoder layer
+        total += cfg.num_layers * 4 * d * d
+    return float(total)
+
+
+def active_param_count(cfg: ModelConfig) -> float:
+    """Params touched per token (MoE: routed top-k + shared only)."""
+    if cfg.moe is None:
+        return param_count(cfg)
+    m = cfg.moe
+    routed_all = (cfg.num_layers - m.first_dense_layers) \
+        * m.num_experts * 3 * cfg.d_model * m.expert_ff
+    routed_active = routed_all * (m.top_k / m.num_experts)
+    return param_count(cfg) - routed_all + routed_active
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: dict[str, int]
+    model_flops: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    useful_ratio: float
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def build_report(arch: str, shape_cfg: ShapeConfig, mesh_name: str,
+                 chips: int, cost: dict, coll: dict[str, int],
+                 cfg: ModelConfig, hw: HardwareSpec = V5E,
+                 hlo_flops_override: Optional[float] = None
+                 ) -> RooflineReport:
+    flops_dev = float(hlo_flops_override if hlo_flops_override is not None
+                      else cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    mf = model_flops(cfg, shape_cfg)
+    # compute term from the analytic global FLOPs (cost_analysis undercounts
+    # while-loop bodies); memory/collective terms from compiled per-device data
+    compute_s = mf / (chips * hw.peak_flops)
+    memory_s = bytes_dev / hw.hbm_bw
+    coll_dev = sum(coll.values())
+    collective_s = coll_dev / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = mf / (flops_dev * chips) if flops_dev > 0 else float("nan")
+    return RooflineReport(
+        arch=arch, shape=shape_cfg.name, mesh=mesh_name, chips=chips,
+        hlo_flops_per_device=flops_dev, hlo_bytes_per_device=bytes_dev,
+        collective_bytes_per_device=coll, model_flops=mf,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, useful_ratio=useful)

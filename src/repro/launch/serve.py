@@ -1,0 +1,57 @@
+"""Serving launcher: batched requests against a (reduced) model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ALL_ARCHS, get_reduced
+from repro.models.model import build_model
+from repro.nn.core import init_params
+from repro.serve.engine import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ALL_ARCHS)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, max_batch=args.max_batch)
+    rng = np.random.RandomState(0)
+
+    extras = None
+    if cfg.prefix_len:
+        def extras(n):
+            return {"patch_embeds": 0.02 * rng.randn(
+                n, cfg.prefix_len, cfg.d_model).astype(np.float32)}
+    elif cfg.is_encdec:
+        def extras(n):
+            return {"frames": 0.02 * rng.randn(
+                n, cfg.encoder_seq, cfg.encoder_d_model).astype(np.float32)}
+
+    for _ in range(args.requests):
+        engine.submit(Request(
+            prompt=rng.randint(0, cfg.vocab_size,
+                               rng.randint(4, 24)).astype(np.int32),
+            max_new_tokens=args.max_new))
+    t0 = time.perf_counter()
+    done = engine.run(extras_fn=extras)
+    dt = time.perf_counter() - t0
+    new = sum(len(r.out_tokens) for r in done)
+    print(f"{len(done)} requests, {new} tokens, {dt:.2f}s "
+          f"({new / dt:.1f} tok/s); stats={engine.stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Training launcher: real runs on whatever devices exist.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --reduced \\
+      --steps 30 --batch 4 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.common.config import ShapeConfig, TrainConfig
+from repro.configs import ALL_ARCHS, get_config, get_reduced
+from repro.data.pipeline import SyntheticLM
+from repro.models.model import build_model
+from repro.nn.core import init_params
+from repro.train.checkpoint import save_checkpoint
+from repro.train.loop import make_train_step
+from repro.train.optim import adamw_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ALL_ARCHS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+    shape = ShapeConfig("train", seq_len=args.seq, global_batch=args.batch,
+                        mode="train")
+    data = SyntheticLM(cfg, shape, seed=0, bigram_q=0.7)
+    tc = TrainConfig(learning_rate=args.lr, warmup_steps=5,
+                     total_steps=args.steps)
+    opt = adamw_init(params)
+    step_fn = jax.jit(make_train_step(model, tc))
+
+    t0 = time.perf_counter()
+    for step in range(args.steps):
+        params, opt, metrics = step_fn(params, opt, data.batch(step))
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
+                  f"({(time.perf_counter() - t0):.1f}s)")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, opt, step=args.steps)
+        print(f"saved -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

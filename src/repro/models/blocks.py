@@ -1,0 +1,145 @@
+"""Per-layer blocks: spec + apply, dispatched on BlockKind.
+
+A "block" is one full decoder layer: temporal mixer (attention / local attn /
+MLA / RG-LRU) + FFN (dense MLP or MoE), with pre-norms and residuals. RWKV is
+special-cased (its reference layer owns both residual branches internally).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.common.config import BlockKind, ModelConfig
+from repro.nn.attention import KVCache, apply_attention, attention_spec
+from repro.nn.mla import MLACache, apply_mla, mla_spec
+from repro.nn.mlp import mlp_apply, mlp_spec
+from repro.nn.moe import moe_apply, moe_spec
+from repro.nn.norms import norm_apply, norm_spec
+from repro.nn.rglru import RGLRUCache, apply_rglru, rglru_spec
+from repro.nn.rwkv import RWKVCache, apply_rwkv, rwkv_spec
+
+
+def block_spec(cfg: ModelConfig, kind: BlockKind, use_moe: bool,
+               cross_attention: bool = False):
+    if kind == BlockKind.RWKV:
+        return rwkv_spec(cfg)
+    if kind in (BlockKind.ATTENTION, BlockKind.LOCAL_ATTENTION):
+        temporal = attention_spec(cfg)
+    elif kind == BlockKind.MLA:
+        temporal = mla_spec(cfg)
+    elif kind == BlockKind.RECURRENT:
+        temporal = rglru_spec(cfg)
+    else:
+        raise ValueError(kind)
+    spec: dict[str, Any] = {
+        "norm1": norm_spec(cfg.d_model, cfg.use_layernorm),
+        "temporal": temporal,
+        "norm2": norm_spec(cfg.d_model, cfg.use_layernorm),
+        "ffn": moe_spec(cfg) if use_moe else mlp_spec(cfg.d_model, cfg.d_ff,
+                                                      cfg.glu),
+    }
+    if cross_attention:
+        spec["norm_x"] = norm_spec(cfg.d_model, cfg.use_layernorm)
+        spec["cross"] = attention_spec(cfg, cross=True,
+                                       kv_d_model=cfg.encoder_d_model or None)
+    return spec
+
+
+def init_block_cache(cfg: ModelConfig, kind: BlockKind, batch: int,
+                     seq_len: int, dtype=jnp.bfloat16):
+    """Concrete zero-filled cache for one block."""
+    dh = cfg.resolved_head_dim
+    kvh = cfg.num_kv_heads
+    if kind == BlockKind.ATTENTION:
+        t = seq_len
+        return KVCache(k=jnp.zeros((batch, t, kvh, dh), dtype),
+                       v=jnp.zeros((batch, t, kvh, dh), dtype))
+    if kind == BlockKind.LOCAL_ATTENTION:
+        t = min(cfg.sliding_window, seq_len)
+        return KVCache(k=jnp.zeros((batch, t, kvh, dh), dtype),
+                       v=jnp.zeros((batch, t, kvh, dh), dtype))
+    if kind == BlockKind.MLA:
+        return MLACache(
+            c_kv=jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dtype),
+            k_rope=jnp.zeros((batch, seq_len, cfg.rope_head_dim), dtype))
+    if kind == BlockKind.RECURRENT:
+        w = cfg.lru_width or cfg.d_model
+        return RGLRUCache(h=jnp.zeros((batch, w), jnp.float32),
+                          conv=jnp.zeros((batch, cfg.conv1d_width - 1, w),
+                                         jnp.float32))
+    if kind == BlockKind.RWKV:
+        h = cfg.d_model // cfg.rwkv_head_dim
+        return RWKVCache(
+            state=jnp.zeros((batch, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                            jnp.float32),
+            last=jnp.zeros((batch, cfg.d_model), jnp.float32),
+            last_cm=jnp.zeros((batch, cfg.d_model), jnp.float32))
+    raise ValueError(kind)
+
+
+def cache_logical_axes(cache) -> Any:
+    return type(cache).logical_axes()
+
+
+def block_apply(
+    params,
+    x: jnp.ndarray,
+    kind: BlockKind,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    *,
+    use_moe: bool,
+    cache=None,
+    cache_index: Optional[jnp.ndarray] = None,
+    enc_out: Optional[jnp.ndarray] = None,
+    cross_cache: Optional[KVCache] = None,
+    prefix_len: int = 0,
+    compute_dtype=jnp.bfloat16,
+):
+    """Returns (x, new_cache, new_cross_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+
+    if kind == BlockKind.RWKV:
+        x, new_cache = apply_rwkv(params, x, cfg, cache=cache,
+                                  compute_dtype=compute_dtype)
+        return x, new_cache, cross_cache, aux
+
+    h = norm_apply(params["norm1"], x, cfg.norm_eps)
+    if kind == BlockKind.ATTENTION:
+        y, new_cache = apply_attention(
+            params["temporal"], h, positions, cfg, causal=True,
+            prefix_len=prefix_len, cache=cache, cache_index=cache_index,
+            compute_dtype=compute_dtype)
+    elif kind == BlockKind.LOCAL_ATTENTION:
+        y, new_cache = apply_attention(
+            params["temporal"], h, positions, cfg, causal=True,
+            window=cfg.sliding_window, cache=cache, cache_index=cache_index,
+            compute_dtype=compute_dtype)
+    elif kind == BlockKind.MLA:
+        y, new_cache = apply_mla(
+            params["temporal"], h, positions, cfg, cache=cache,
+            cache_index=cache_index, compute_dtype=compute_dtype)
+    elif kind == BlockKind.RECURRENT:
+        y, new_cache = apply_rglru(params["temporal"], h, cfg, cache=cache,
+                                   compute_dtype=compute_dtype)
+    else:
+        raise ValueError(kind)
+    x = x + y.astype(x.dtype)
+
+    new_cross = cross_cache
+    if "cross" in params:
+        hx = norm_apply(params["norm_x"], x, cfg.norm_eps)
+        yx, new_cross = apply_attention(
+            params["cross"], hx, positions, cfg, kv_x=enc_out, cross=True,
+            cache=cross_cache, cache_index=cache_index, use_rope=False,
+            compute_dtype=compute_dtype)
+        x = x + yx.astype(x.dtype)
+
+    h2 = norm_apply(params["norm2"], x, cfg.norm_eps)
+    if use_moe:
+        y2, aux = moe_apply(params["ffn"], h2, cfg, compute_dtype=compute_dtype)
+    else:
+        y2 = mlp_apply(params["ffn"], h2, cfg, compute_dtype=compute_dtype)
+    x = x + y2.astype(x.dtype)
+    return x, new_cache, new_cross, aux

@@ -1,0 +1,154 @@
+"""Model input/state specs: concrete batches for smoke tests and
+ShapeDtypeStruct stand-ins (with shardings) for the multi-pod dry-run.
+
+The modality-frontend carve-out lives here: whisper gets precomputed frame
+embeddings, paligemma gets precomputed patch embeddings — the transformer
+backbone is what the framework implements.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig, ShapeConfig
+from repro.common.sharding import LogicalRules
+
+# logical axes per cache dataclass field (field names are globally unique)
+_CACHE_FIELD_AXES: dict[str, tuple] = {
+    "k": ("batch", "cache_seq", "kv_heads", None),
+    "v": ("batch", "cache_seq", "kv_heads", None),
+    "c_kv": ("batch", "cache_seq", "kv_lora"),
+    "k_rope": ("batch", "cache_seq", None),
+    "h": ("batch", "state"),
+    "conv": ("batch", None, "state"),
+    "state": ("batch", "heads", None, None),
+    "last": ("batch", None),
+    "last_cm": ("batch", None),
+}
+
+_BATCH_FIELD_AXES: dict[str, tuple] = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "patch_embeds": ("batch", "seq", None),
+    "frames": ("batch", "frames", None),
+}
+
+
+def _leaf_axes(path) -> tuple:
+    """Find the logical axes of a cache/batch leaf from its tree path."""
+    for entry in reversed(path):
+        name = getattr(entry, "name", getattr(entry, "key", None))
+        if name in _CACHE_FIELD_AXES:
+            axes = _CACHE_FIELD_AXES[name]
+            return axes
+        if name in _BATCH_FIELD_AXES:
+            return _BATCH_FIELD_AXES[name]
+    raise KeyError(f"no logical axes for path {path}")
+
+
+def attach_shardings(tree: Any, rules: Optional[LogicalRules],
+                     stacked: bool = False) -> Any:
+    """Attach NamedShardings to a ShapeDtypeStruct tree via field-name axes.
+    ``stacked``: leaves carry a leading 'layers' dim (segment caches)."""
+
+    def _attach(path, leaf):
+        if rules is None:
+            return leaf
+        axes = _leaf_axes(path)
+        # Claim priority: batch first, then kv_heads (so the cache's head
+        # sharding matches q/scores and no per-step gather appears), then
+        # cache_seq (the long_500k batch=1 / MQA fallback), layer-stack dim
+        # last — a cache sharded unlike the activations that read it makes
+        # GSPMD reshard the whole cache every decode step.
+        prio = {"batch": 0, "kv_heads": 1, "heads": 1, "kv_lora": 2,
+                "cache_seq": 3, "layers": 9}
+        claim_order = None
+        if stacked and len(leaf.shape) == len(axes) + 1:
+            axes = ("layers", *axes)
+        if len(axes) == len(leaf.shape):
+            claim_order = sorted(range(len(axes)),
+                                 key=lambda i: prio.get(axes[i], 5))
+        sharding = rules.sharding_for(leaf.shape, axes, claim_order)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sharding)
+
+    return jax.tree_util.tree_map_with_path(_attach, tree)
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    return seq_len - cfg.prefix_len if cfg.prefix_len else seq_len
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig,
+                 rules: Optional[LogicalRules] = None) -> dict:
+    """ShapeDtypeStructs for one train/prefill batch."""
+    b, s = shape.global_batch, shape.seq_len
+    st = text_len(cfg, s)
+    out: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((b, st), jnp.int32),
+    }
+    if shape.mode == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, st), jnp.int32)
+    if cfg.prefix_len:
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.prefix_len, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encdec:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.encoder_d_model or cfg.d_model),
+            jnp.bfloat16)
+    return attach_shardings(out, rules)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0) -> dict:
+    """Concrete random batch (smoke tests / examples)."""
+    rng = np.random.RandomState(seed)
+    b, s = shape.global_batch, shape.seq_len
+    st = text_len(cfg, s)
+    out: dict[str, Any] = {
+        "tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, st)),
+                              jnp.int32),
+    }
+    if shape.mode == "train":
+        out["labels"] = jnp.asarray(rng.randint(0, cfg.vocab_size, (b, st)),
+                                    jnp.int32)
+    if cfg.prefix_len:
+        out["patch_embeds"] = jnp.asarray(
+            rng.randn(b, cfg.prefix_len, cfg.d_model) * 0.02, jnp.bfloat16)
+    if cfg.is_encdec:
+        out["frames"] = jnp.asarray(
+            rng.randn(b, cfg.encoder_seq, cfg.encoder_d_model or cfg.d_model)
+            * 0.02, jnp.bfloat16)
+    return out
+
+
+def decode_state_struct(model, shape: ShapeConfig,
+                        rules: Optional[LogicalRules] = None):
+    """ShapeDtypeStruct tree for the DecodeState at a given cache length."""
+    from repro.models.model import DecodeState
+
+    b, s = shape.global_batch, shape.seq_len
+
+    def build():
+        caches = model.init_cache(b, s)
+        return DecodeState(caches=caches, index=jnp.asarray(s - 1, jnp.int32))
+
+    state = jax.eval_shape(build)
+    caches = attach_shardings(state.caches, rules, stacked=True)
+    index = state.index
+    if rules is not None:
+        index = jax.ShapeDtypeStruct(
+            index.shape, index.dtype,
+            sharding=rules.sharding_for(index.shape, ()))
+    return DecodeState(caches=caches, index=index)
+
+
+def decode_tokens_struct(cfg: ModelConfig, shape: ShapeConfig,
+                         rules: Optional[LogicalRules] = None):
+    sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    if rules is not None:
+        sds = jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype,
+            sharding=rules.sharding_for(sds.shape, ("batch", None)))
+    return sds

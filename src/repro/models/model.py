@@ -1,0 +1,380 @@
+"""Model definitions: decoder-only LM (dense/MoE/hybrid/SSM/VLM) and
+encoder-decoder (whisper-style), built from scanned layer segments.
+
+Layers are grouped into *segments* of identical structure; each segment's
+parameters are stacked along a leading "layers" axis (FSDP-sharded) and the
+segment is applied with ``jax.lax.scan`` — keeping HLO size O(num segments),
+not O(num layers), which is what makes 512-device dry-run compiles tractable.
+Hybrid stacks (recurrentgemma's rec,rec,local-attn) scan over *cycles* of
+blocks; remainders become a short tail segment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import BlockKind, ModelConfig
+from repro.common.sharding import with_logical_constraint
+from repro.models.blocks import (
+    block_apply,
+    block_spec,
+    init_block_cache,
+)
+from repro.nn.attention import KVCache, apply_attention, attention_spec
+from repro.nn.core import ParamSpec, normal_init, spec_map
+from repro.nn.linear import embed_apply, embedding_spec, unembed_apply
+from repro.nn.norms import norm_apply, norm_spec
+from repro.nn.rope import sinusoidal_positions
+from repro.train.loss import (
+    chunked_unembed_cross_entropy,
+    softmax_cross_entropy,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    cycle: tuple[BlockKind, ...]
+    count: int
+    use_moe: bool = False
+    cross: bool = False
+
+
+def segments_for(cfg: ModelConfig) -> list[Segment]:
+    pat = tuple(cfg.block_pattern)
+    n_layers = cfg.num_layers
+    cross = cfg.is_encdec
+    if cfg.moe is not None and len(pat) == 1:
+        nd = cfg.moe.first_dense_layers
+        segs = []
+        if nd:
+            segs.append(Segment(pat, nd, use_moe=False, cross=cross))
+        segs.append(Segment(pat, n_layers - nd, use_moe=True, cross=cross))
+        return segs
+    n_full, leftover = divmod(n_layers, len(pat))
+    segs = [Segment(pat, n_full, cross=cross)]
+    if leftover:
+        segs.append(Segment(pat[:leftover], 1, cross=cross))
+    return segs
+
+
+def _stack_specs(spec: Any, n: int) -> Any:
+    def _stack(name: str, p: ParamSpec):
+        def init(key, shape, dtype):
+            keys = jax.random.split(key, n)
+            return jax.vmap(lambda k: p.init(k, p.shape, dtype))(keys)
+
+        return ParamSpec((n, *p.shape), ("layers", *p.logical), init, p.dtype)
+
+    return spec_map(_stack, spec)
+
+
+def _segment_spec(cfg: ModelConfig, seg: Segment) -> Any:
+    cycle_spec = {
+        f"b{j}": block_spec(cfg, kind, seg.use_moe, cross_attention=seg.cross)
+        for j, kind in enumerate(seg.cycle)
+    }
+    return _stack_specs(cycle_spec, seg.count)
+
+
+def _segment_cache(cfg: ModelConfig, seg: Segment, batch: int, seq_len: int,
+                   dtype=jnp.bfloat16) -> Any:
+    def one():
+        step = {}
+        for j, kind in enumerate(seg.cycle):
+            entry = {"self": init_block_cache(cfg, kind, batch, seq_len, dtype)}
+            if seg.cross:
+                dh = cfg.resolved_head_dim
+                entry["cross"] = KVCache(
+                    k=jnp.zeros((batch, cfg.encoder_seq, cfg.num_kv_heads, dh),
+                                dtype),
+                    v=jnp.zeros((batch, cfg.encoder_seq, cfg.num_kv_heads, dh),
+                                dtype))
+            step[f"b{j}"] = entry
+        return step
+
+    single = one()
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (seg.count, *x.shape)).copy()
+        if seg.count > 1 else x[None],
+        single)
+
+
+def _segment_apply(
+    seg: Segment,
+    seg_params: Any,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    seg_cache: Any = None,
+    cache_index: Optional[jnp.ndarray] = None,
+    enc_out: Optional[jnp.ndarray] = None,
+    prefix_len: int = 0,
+    remat: bool = False,
+    compute_dtype=jnp.bfloat16,
+):
+    """Scan the segment. Returns (x, new_seg_cache, aux_sum)."""
+
+    def body2(carry, xs):
+        x, aux = carry
+        p_step, cache_step = xs
+        new_cache_step = {}
+        for j, kind in enumerate(seg.cycle):
+            c = cache_step[f"b{j}"] if cache_step is not None else None
+            x, nc, ncross, a = block_apply(
+                p_step[f"b{j}"], x, kind, cfg, positions,
+                use_moe=seg.use_moe,
+                cache=(c["self"] if c is not None else None),
+                cache_index=cache_index,
+                enc_out=enc_out,
+                cross_cache=(c.get("cross") if c is not None else None),
+                prefix_len=prefix_len,
+                compute_dtype=compute_dtype)
+            aux = aux + a
+            entry = {"self": nc}
+            if seg.cross:
+                entry["cross"] = ncross
+            new_cache_step[f"b{j}"] = entry
+        return (x, aux), new_cache_step
+
+    fn = jax.checkpoint(body2) if remat else body2
+    (x, aux), new_cache = jax.lax.scan(
+        fn, (x, jnp.zeros((), jnp.float32)), (seg_params, seg_cache))
+    return x, new_cache, aux
+
+
+@dataclasses.dataclass
+class DecodeState:
+    caches: list          # per segment: stacked cache trees
+    index: jnp.ndarray    # scalar int32: number of tokens already in cache
+
+
+jax.tree_util.register_dataclass(DecodeState, data_fields=["caches", "index"],
+                                 meta_fields=[])
+
+
+class DecoderLM:
+    """Decoder-only LM covering dense / MoE / hybrid / SSM / prefix-VLM."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.segments = segments_for(cfg)
+        self.compute_dtype = jnp.dtype(cfg.dtype)
+
+    # ---- parameters ----
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        spec = {
+            "embed": embedding_spec(cfg.vocab_size, cfg.d_model),
+            "final_norm": norm_spec(cfg.d_model, cfg.use_layernorm),
+            "segments": [_segment_spec(cfg, s) for s in self.segments],
+        }
+        if not cfg.tie_embeddings:
+            spec["lm_head"] = {
+                "embedding": ParamSpec((cfg.vocab_size, cfg.d_model),
+                                       ("vocab", "embed"), normal_init(0.02))}
+        return spec
+
+    # ---- embedding ----
+    def _embed(self, params, tokens, patch_embeds=None):
+        cfg = self.cfg
+        x = embed_apply(params["embed"], tokens, self.compute_dtype)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, self.compute_dtype)
+        if patch_embeds is not None:
+            x = jnp.concatenate([patch_embeds.astype(self.compute_dtype), x],
+                                axis=1)
+        return with_logical_constraint(x, ("batch", "seq", None))
+
+    def _unembed(self, params, x):
+        head = params.get("lm_head", params["embed"])
+        return unembed_apply(head, x, self.compute_dtype)
+
+    # ---- forward ----
+    def forward(self, params, tokens, *, patch_embeds=None, caches=None,
+                index=None, remat=False):
+        cfg = self.cfg
+        x = self._embed(params, tokens, patch_embeds)
+        b, s, _ = x.shape
+        if index is None:
+            positions = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        else:
+            positions = jnp.broadcast_to(index.astype(jnp.int32), (b, s))
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for i, seg in enumerate(self.segments):
+            seg_cache = caches[i] if caches is not None else None
+            x, nc, aux = _segment_apply(
+                seg, params["segments"][i], x, positions, cfg,
+                seg_cache=seg_cache, cache_index=index,
+                prefix_len=cfg.prefix_len, remat=remat,
+                compute_dtype=self.compute_dtype)
+            new_caches.append(nc)
+            aux_total = aux_total + aux
+        x = norm_apply(params["final_norm"], x, cfg.norm_eps)
+        return x, new_caches, aux_total
+
+    # ---- training ----
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x, _, aux = self.forward(
+            params, batch["tokens"], patch_embeds=batch.get("patch_embeds"),
+            remat=(cfg.remat == "full"))
+        if cfg.prefix_len:
+            # text predictions start at the last prefix position
+            s_text = batch["labels"].shape[1]
+            x = jax.lax.dynamic_slice_in_dim(x, cfg.prefix_len - 1, s_text,
+                                             axis=1)
+        if cfg.loss_chunk:
+            head = params.get("lm_head", params["embed"])
+            nll = chunked_unembed_cross_entropy(
+                x, head["embedding"], batch["labels"],
+                seq_chunk=cfg.loss_chunk, compute_dtype=self.compute_dtype)
+        else:
+            logits = self._unembed(params, x)
+            nll = softmax_cross_entropy(logits, batch["labels"])
+        loss = nll + aux
+        return loss, {"nll": nll, "aux": aux}
+
+    # ---- serving ----
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
+        return [_segment_cache(self.cfg, seg, batch, seq_len, dtype)
+                for seg in self.segments]
+
+    def prefill(self, params, batch, seq_len: Optional[int] = None):
+        """Run the prompt through the model, filling caches.
+
+        Returns (last_token_logits, DecodeState)."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        total = s + (self.cfg.prefix_len or 0)
+        caches = self.init_cache(b, seq_len or total)
+        x, new_caches, _ = self.forward(
+            params, tokens, patch_embeds=batch.get("patch_embeds"),
+            caches=caches)
+        logits = self._unembed(params, x[:, -1:])[:, 0]
+        state = DecodeState(caches=new_caches,
+                            index=jnp.asarray(total, jnp.int32))
+        return logits, state
+
+    def decode_step(self, params, state: DecodeState, tokens):
+        """tokens: (B, 1). Returns (logits (B, V), new state)."""
+        x, new_caches, _ = self.forward(
+            params, tokens, caches=state.caches, index=state.index)
+        logits = self._unembed(params, x[:, -1:])[:, 0]
+        return logits, DecodeState(caches=new_caches, index=state.index + 1)
+
+
+class EncDecLM(DecoderLM):
+    """Whisper-style encoder-decoder. The modality frontend is a stub: the
+    input is precomputed frame embeddings (B, encoder_seq, encoder_d_model)."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.is_encdec
+        super().__init__(cfg)
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        spec = super().param_specs()
+        enc_cfg = dataclasses.replace(
+            cfg, d_model=cfg.encoder_d_model or cfg.d_model,
+            num_kv_heads=cfg.num_heads)
+        from repro.nn.mlp import mlp_spec
+
+        enc_block = {
+            "norm1": norm_spec(enc_cfg.d_model, cfg.use_layernorm),
+            "self": attention_spec(enc_cfg),
+            "norm2": norm_spec(enc_cfg.d_model, cfg.use_layernorm),
+            "ffn": mlp_spec(enc_cfg.d_model, cfg.d_ff, cfg.glu),
+        }
+        spec["encoder"] = {
+            "blocks": _stack_specs(enc_block, cfg.encoder_layers),
+            "final_norm": norm_spec(enc_cfg.d_model, cfg.use_layernorm),
+        }
+        return spec
+
+    def encode(self, params, frames, remat=False):
+        """frames: (B, T, d_enc) stub embeddings -> encoder output."""
+        cfg = self.cfg
+        enc_cfg = dataclasses.replace(
+            cfg, d_model=cfg.encoder_d_model or cfg.d_model,
+            num_kv_heads=cfg.num_heads)
+        b, t, d = frames.shape
+        x = frames.astype(self.compute_dtype)
+        x = x + sinusoidal_positions(t, d).astype(self.compute_dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None],
+                                     (b, t))
+
+        from repro.nn.mlp import mlp_apply
+
+        def body(x, p):
+            h = norm_apply(p["norm1"], x, cfg.norm_eps)
+            y, _ = apply_attention(p["self"], h, positions, enc_cfg,
+                                   causal=False, use_rope=False,
+                                   compute_dtype=self.compute_dtype)
+            x = x + y.astype(x.dtype)
+            h2 = norm_apply(p["norm2"], x, cfg.norm_eps)
+            y2 = mlp_apply(p["ffn"], h2, cfg, self.compute_dtype)
+            return x + y2.astype(x.dtype), None
+
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(fn, x, params["encoder"]["blocks"])
+        return norm_apply(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+    def forward(self, params, tokens, *, patch_embeds=None, caches=None,
+                index=None, remat=False, enc_out=None, frames=None):
+        cfg = self.cfg
+        if enc_out is None and frames is not None:
+            enc_out = self.encode(params, frames, remat=remat)
+        x = self._embed(params, tokens)
+        b, s, _ = x.shape
+        if index is None:
+            positions = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        else:
+            positions = jnp.broadcast_to(index.astype(jnp.int32), (b, s))
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for i, seg in enumerate(self.segments):
+            seg_cache = caches[i] if caches is not None else None
+            x, nc, aux = _segment_apply(
+                seg, params["segments"][i], x, positions, cfg,
+                seg_cache=seg_cache, cache_index=index, enc_out=enc_out,
+                remat=remat, compute_dtype=self.compute_dtype)
+            new_caches.append(nc)
+            aux_total = aux_total + aux
+        x = norm_apply(params["final_norm"], x, cfg.norm_eps)
+        return x, new_caches, aux_total
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x, _, aux = self.forward(params, batch["tokens"],
+                                 frames=batch["frames"],
+                                 remat=(cfg.remat == "full"))
+        logits = self._unembed(params, x)
+        nll = softmax_cross_entropy(logits, batch["labels"])
+        return nll + aux, {"nll": nll, "aux": aux}
+
+    def prefill(self, params, batch, seq_len: Optional[int] = None):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        enc_out = self.encode(params, batch["frames"])
+        caches = self.init_cache(b, seq_len or s)
+        x, new_caches, _ = self.forward(params, tokens, caches=caches,
+                                        enc_out=enc_out)
+        logits = self._unembed(params, x[:, -1:])[:, 0]
+        return logits, DecodeState(caches=new_caches,
+                                   index=jnp.asarray(s, jnp.int32))
+
+    def decode_step(self, params, state: DecodeState, tokens):
+        x, new_caches, _ = self.forward(params, tokens, caches=state.caches,
+                                        index=state.index)
+        logits = self._unembed(params, x[:, -1:])[:, 0]
+        return logits, DecodeState(caches=new_caches, index=state.index + 1)
+
+
+def build_model(cfg: ModelConfig):
+    return EncDecLM(cfg) if cfg.is_encdec else DecoderLM(cfg)

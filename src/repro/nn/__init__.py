@@ -1,0 +1,7 @@
+from repro.nn.core import (
+    ParamSpec,
+    abstract_params,
+    init_params,
+    param_shardings,
+    spec_map,
+)

@@ -1,0 +1,272 @@
+"""Attention: GQA/MQA, causal / sliding-window / prefix-LM / cross variants.
+
+Full-sequence forward is q-chunked (online blockwise over query chunks) so
+32k-sequence prefill never materializes an (S, S) score tensor per head —
+memory is bounded by chunk x S. Sliding-window blocks use a ring-buffer KV
+cache of size `window` so long-context decode stays O(window) per layer.
+
+Sharding: q is viewed as (B, S, K, G, Dh) with K = kv heads, G = H // K;
+logical axes put "kv_heads" on K and "heads" on G so that either dim picks up
+the 'model' mesh axis depending on which is divisible (GQA vs MQA).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.common.sharding import with_logical_constraint
+from repro.nn.core import ParamSpec, fan_in_init, ones_init
+from repro.nn.rope import apply_rope
+
+NEG_INF = -2.0e38
+
+
+def attention_spec(cfg: ModelConfig, *, cross: bool = False, kv_d_model: int = 0):
+    d, h, k, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    kv_d = kv_d_model or d
+    spec = {
+        "q": {"w": ParamSpec((d, h, dh), ("embed", "heads", "qk"), fan_in_init(0))},
+        "k": {"w": ParamSpec((kv_d, k, dh), ("embed", "kv_heads", "qk"), fan_in_init(0))},
+        "v": {"w": ParamSpec((kv_d, k, dh), ("embed", "kv_heads", "qk"), fan_in_init(0))},
+        "o": {"w": ParamSpec((h, dh, d), ("heads", "qk", "embed"), fan_in_init(0))},
+    }
+    if cfg.qk_norm:
+        spec["q_norm"] = {"scale": ParamSpec((dh,), (None,), ones_init())}
+        spec["k_norm"] = {"scale": ParamSpec((dh,), (None,), ones_init())}
+    return spec
+
+
+@dataclasses.dataclass
+class KVCache:
+    """Pre-allocated cache. For sliding-window blocks, ``k``/``v`` hold only
+    the last ``window`` positions (ring buffer); otherwise full length."""
+
+    k: jnp.ndarray   # (B, T, K, Dh)
+    v: jnp.ndarray   # (B, T, K, Dh)
+
+    @staticmethod
+    def logical_axes():
+        return {
+            "k": ("batch", "cache_seq", "kv_heads", None),
+            "v": ("batch", "cache_seq", "kv_heads", None),
+        }
+
+
+def init_cache_shape(cfg: ModelConfig, batch: int, seq_len: int, window: int = 0):
+    k = cfg.num_kv_heads
+    dh = cfg.resolved_head_dim
+    t = min(window, seq_len) if window else seq_len
+    return (batch, t, k, dh)
+
+
+def _rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def _mask(
+    q_pos: jnp.ndarray,    # (B, s) absolute positions of queries
+    kv_pos: jnp.ndarray,   # (B, t) absolute positions of keys (-1 = invalid)
+    *,
+    causal: bool,
+    window: int = 0,
+    prefix_len: int = 0,
+) -> jnp.ndarray:
+    """(B, 1, 1, s, t) boolean mask (True = attend)."""
+    q = q_pos[:, :, None]
+    kv = kv_pos[:, None, :]
+    valid = kv >= 0
+    if causal:
+        ok = kv <= q
+        if prefix_len:
+            # prefix-LM: bidirectional attention within the prefix block
+            ok = ok | ((kv < prefix_len) & (q < prefix_len))
+        if window:
+            ok = ok & (kv > q - window)
+    else:
+        ok = jnp.ones_like(kv <= q)
+    m = ok & valid
+    return m[:, None, None, :, :]
+
+
+def _attend_block(q, k, v, mask, *, softcap: float, scale: float):
+    """q: (B,s,K,G,Dh)  k,v: (B,t,K,Dh)  mask: (B,1,1,s,t) -> (B,s,K,G,Dh)."""
+    # preferred_element_type: bf16 operands, f32 accumulation — native on
+    # the MXU, and avoids materializing f32 copies of the (large) k.
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = with_logical_constraint(
+        scores, ("batch", "kv_heads", "heads", "act_seq", None)
+    )
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out
+
+
+def multihead_attention(
+    q: jnp.ndarray,          # (B, S, H, Dh)
+    k: jnp.ndarray,          # (B, T, K, Dh)
+    v: jnp.ndarray,          # (B, T, K, Dh)
+    q_pos: jnp.ndarray,      # (B, S)
+    kv_pos: jnp.ndarray,     # (B, T)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: int = 0,
+    softcap: float = 0.0,
+    q_chunk: int = 1024,
+) -> jnp.ndarray:
+    b, s, h, dh = q.shape
+    dv = v.shape[-1]
+    kh = k.shape[2]
+    g = h // kh
+    scale = dh ** -0.5
+    qg = q.reshape(b, s, kh, g, dh)
+    qg = with_logical_constraint(qg, ("batch", "seq", "kv_heads", "heads", None))
+
+    def block(q_blk, pos_blk):
+        mask = _mask(pos_blk, kv_pos, causal=causal, window=window,
+                     prefix_len=prefix_len)
+        return _attend_block(q_blk, k, v, mask, softcap=softcap, scale=scale)
+
+    if s > q_chunk and s % q_chunk != 0:
+        # non-divisible sequence (e.g. whisper's 1500 frames): largest
+        # divisor <= q_chunk, or a single block if none is reasonable
+        c = q_chunk
+        while s % c:
+            c -= 1
+        q_chunk = c if c >= 128 else s
+
+    if s <= q_chunk:
+        out = block(qg, q_pos)
+    else:
+        nc = s // q_chunk
+        q_chunks = qg.reshape(b, nc, q_chunk, kh, g, dh).swapaxes(0, 1)
+        pos_chunks = q_pos.reshape(b, nc, q_chunk).swapaxes(0, 1)
+        out = jax.lax.map(lambda args: block(*args), (q_chunks, pos_chunks))
+        out = out.swapaxes(0, 1).reshape(b, nc * q_chunk, kh, g, dv)
+
+    out = out.reshape(b, s, h, dv)
+    return with_logical_constraint(out, ("batch", "seq", "heads", None))
+
+
+def apply_attention(
+    params,
+    x: jnp.ndarray,                    # (B, S, d)
+    positions: jnp.ndarray,            # (B, S)
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: int = 0,
+    kv_x: Optional[jnp.ndarray] = None,     # cross-attention source
+    cross: bool = False,                    # cross-attn even if kv_x is None
+    use_rope: bool = True,
+    cache: Optional[KVCache] = None,
+    cache_index: Optional[jnp.ndarray] = None,   # scalar int32: tokens so far
+    compute_dtype=jnp.bfloat16,
+):
+    """Returns (out, new_cache). Modes:
+      * full forward / prefill: cache is None or written from scratch,
+      * decode: S == 1 and cache_index is the current length.
+    """
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(compute_dtype),
+                   params["q"]["w"].astype(compute_dtype))
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("btd,dhk->bthk", src.astype(compute_dtype),
+                   params["k"]["w"].astype(compute_dtype))
+    v = jnp.einsum("btd,dhk->bthk", src.astype(compute_dtype),
+                   params["v"]["w"].astype(compute_dtype))
+
+    if cfg.qk_norm:
+        q = _rmsnorm(q, params["q_norm"]["scale"])
+        k = _rmsnorm(k, params["k_norm"]["scale"])
+
+    is_cross = cross or (kv_x is not None)
+    if use_rope and not is_cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if (cache is not None and cache_index is not None and s == 1
+            and not is_cross):
+        # --- decode: append this token's K/V, attend over the cache ---
+        t = cache.k.shape[1]
+        if window and t <= window:
+            slot = cache_index % t          # ring buffer
+        else:
+            slot = cache_index
+        ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                          (0, slot, 0, 0))
+        new_cache = KVCache(k=ck, v=cv)
+        # absolute positions held in the cache slots
+        slots = jnp.arange(t, dtype=jnp.int32)
+        if window and t <= window:
+            # slot i holds absolute position: the largest p <= cache_index with
+            # p % t == i  (or invalid if never written)
+            delta = (slot - slots) % t
+            kv_positions = cache_index - delta
+            kv_positions = jnp.where(kv_positions >= 0, kv_positions, -1)
+        else:
+            kv_positions = jnp.where(slots <= cache_index, slots, -1)
+        kv_pos = jnp.broadcast_to(kv_positions[None, :], (b, t))
+        out = multihead_attention(
+            q, ck.astype(compute_dtype), cv.astype(compute_dtype),
+            positions, kv_pos, causal=causal, window=window,
+            prefix_len=prefix_len, softcap=cfg.logit_softcap)
+    elif is_cross and cache is not None and cache_index is not None and s == 1:
+        # decode with precomputed cross-attention cache
+        t = cache.k.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+        out = multihead_attention(
+            q, cache.k.astype(compute_dtype), cache.v.astype(compute_dtype),
+            positions, kv_pos, causal=False, softcap=cfg.logit_softcap)
+        new_cache = cache
+    else:
+        # --- full forward / prefill ---
+        kv_pos = positions if not is_cross else jnp.broadcast_to(
+            jnp.arange(k.shape[1], dtype=jnp.int32)[None], (b, k.shape[1]))
+        out = multihead_attention(
+            q, k, v, positions, kv_pos, causal=causal and not is_cross,
+            window=window, prefix_len=prefix_len, softcap=cfg.logit_softcap)
+        if cache is not None:
+            # prefill: write K/V into the (possibly ring) cache
+            t = cache.k.shape[1]
+            if t < k.shape[1]:
+                # keep the last `t` positions; ring layout: slot = pos % t
+                tail_k, tail_v = k[:, -t:], v[:, -t:]
+                tail_pos = positions[:, -t:]
+                roll = (tail_pos[0, 0] % t).astype(jnp.int32)
+                ck = jnp.roll(tail_k, shift=roll, axis=1)
+                cv = jnp.roll(tail_v, shift=roll, axis=1)
+                new_cache = KVCache(k=ck.astype(cache.k.dtype),
+                                    v=cv.astype(cache.v.dtype))
+            else:
+                ck = jnp.zeros_like(cache.k)
+                ck = jax.lax.dynamic_update_slice(
+                    ck, k.astype(ck.dtype), (0, 0, 0, 0))
+                cv = jnp.zeros_like(cache.v)
+                cv = jax.lax.dynamic_update_slice(
+                    cv, v.astype(cv.dtype), (0, 0, 0, 0))
+                new_cache = KVCache(k=ck, v=cv)
+
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(compute_dtype),
+                     params["o"]["w"].astype(compute_dtype))
+    out = with_logical_constraint(out, ("batch", "seq", None))
+    return out, new_cache
+
+
+jax.tree_util.register_dataclass(
+    KVCache, data_fields=["k", "v"], meta_fields=[]
+)

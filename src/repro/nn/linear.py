@@ -1,0 +1,59 @@
+"""Einsum/linear and embedding layers (spec + apply pairs)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.common.sharding import with_logical_constraint
+from repro.nn.core import ParamSpec, fan_in_init, normal_init, zeros_init
+
+
+def linear_spec(
+    in_dim: int,
+    out_dims: Sequence[int],
+    logical: Sequence[Optional[str]],
+    use_bias: bool = False,
+    stddev: Optional[float] = None,
+):
+    """Weight (in_dim, *out_dims). logical covers all dims of the weight."""
+    shape = (in_dim, *out_dims)
+    init = normal_init(stddev) if stddev is not None else fan_in_init(0)
+    spec = {"w": ParamSpec(shape, tuple(logical), init)}
+    if use_bias:
+        spec["b"] = ParamSpec(tuple(out_dims), tuple(logical[1:]), zeros_init())
+    return spec
+
+
+def linear_apply(params, x: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """x: (..., in_dim) @ w: (in_dim, *out) -> (..., *out)."""
+    w = params["w"].astype(compute_dtype)
+    out_rank = w.ndim - 1
+    letters = "abcde"[:out_rank]
+    y = jnp.einsum(f"...i,i{letters}->...{letters}", x.astype(compute_dtype), w)
+    if "b" in params:
+        y = y + params["b"].astype(compute_dtype)
+    return y
+
+
+def embedding_spec(vocab: int, d_model: int, stddev: float = 1.0):
+    return {
+        "embedding": ParamSpec(
+            (vocab, d_model), ("vocab", "embed"), normal_init(stddev)
+        )
+    }
+
+
+def embed_apply(params, ids: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    emb = params["embedding"].astype(compute_dtype)
+    y = jnp.take(emb, ids, axis=0)
+    return with_logical_constraint(y, ("batch", "seq", None))
+
+
+def unembed_apply(params, x: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Logits: (..., d) @ (V, d)^T -> (..., V), vocab-sharded."""
+    emb = params["embedding"].astype(compute_dtype)
+    logits = jnp.einsum("...d,vd->...v", x.astype(compute_dtype), emb)
+    if logits.ndim == 3:
+        logits = with_logical_constraint(logits, ("batch", "seq", "vocab"))
+    return logits

@@ -1,0 +1,160 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed to a rank-``kv_lora_rank`` latent c_kv plus a single shared
+RoPE key head; the decode cache stores only (c_kv, k_rope) — the paper's
+93%+ KV-cache reduction. Decode uses the *absorbed* formulation: W_uk is
+absorbed into the query and W_uv into the attention output, so each decode
+step works directly on the latent cache (no per-step K/V re-expansion).
+
+Prefill/train use the expanded formulation (materialize K/V per chunk), which
+is compute-optimal when S tokens are processed at once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.common.sharding import with_logical_constraint
+from repro.nn.core import ParamSpec, fan_in_init
+from repro.nn.norms import rmsnorm_apply, rmsnorm_spec
+from repro.nn.rope import apply_rope
+
+NEG_INF = -2.0e38
+
+
+@dataclasses.dataclass
+class MLACache:
+    c_kv: jnp.ndarray     # (B, T, R)      latent
+    k_rope: jnp.ndarray   # (B, T, Dr)     shared rope key head
+
+    @staticmethod
+    def logical_axes():
+        return {
+            "c_kv": ("batch", "cache_seq", "kv_lora"),
+            "k_rope": ("batch", "cache_seq", None),
+        }
+
+
+jax.tree_util.register_dataclass(MLACache, data_fields=["c_kv", "k_rope"],
+                                 meta_fields=[])
+
+
+def mla_spec(cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.num_heads
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    spec = {
+        # KV path: d -> latent r (+ shared rope head)
+        "w_dkv": {"w": ParamSpec((d, r), ("embed", "kv_lora"), fan_in_init(0))},
+        "w_kr": {"w": ParamSpec((d, dr), ("embed", None), fan_in_init(0))},
+        "kv_norm": rmsnorm_spec(r),
+        # up-projections latent -> per-head K_nope / V. Sharded on HEADS
+        # (not the latent dim): the expanded K/V activations are (B,S,H,*)
+        # and must land head-sharded, or attention gathers them whole.
+        "w_uk": {"w": ParamSpec((r, h, dn), (None, "heads", None), fan_in_init(0))},
+        "w_uv": {"w": ParamSpec((r, h, dv), (None, "heads", None), fan_in_init(0))},
+        # output
+        "o": {"w": ParamSpec((h, dv, d), ("heads", None, "embed"), fan_in_init(0))},
+    }
+    if qr:
+        spec["w_dq"] = {"w": ParamSpec((d, qr), ("embed", None), fan_in_init(0))}
+        spec["q_norm"] = rmsnorm_spec(qr)
+        spec["w_uq"] = {"w": ParamSpec((qr, h, dn + dr), (None, "heads", "qk"),
+                                       fan_in_init(0))}
+    else:
+        spec["w_q"] = {"w": ParamSpec((d, h, dn + dr), ("embed", "heads", "qk"),
+                                      fan_in_init(0))}
+    return spec
+
+
+def _project_q(params, x, cfg: ModelConfig, compute_dtype):
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"]["w"].astype(compute_dtype))
+        cq = rmsnorm_apply(params["q_norm"], cq, cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"]["w"].astype(compute_dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"]["w"].astype(compute_dtype))
+    return with_logical_constraint(q, ("batch", "seq", "heads", None))
+
+
+def apply_mla(
+    params,
+    x: jnp.ndarray,                  # (B, S, d)
+    positions: jnp.ndarray,          # (B, S)
+    cfg: ModelConfig,
+    *,
+    cache: Optional[MLACache] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+    compute_dtype=jnp.bfloat16,
+):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    scale = (dn + dr) ** -0.5
+    x = x.astype(compute_dtype)
+
+    q = _project_q(params, x, cfg, compute_dtype)            # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]["w"].astype(compute_dtype))
+    c_kv = rmsnorm_apply(params["kv_norm"], c_kv, cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dk->bsk", x, params["w_kr"]["w"].astype(compute_dtype))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    new_cache = None
+    if cache is not None and cache_index is not None and s == 1:
+        # ---- absorbed decode over the latent cache ----
+        ckv = jax.lax.dynamic_update_slice(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, cache_index, 0))
+        kr = jax.lax.dynamic_update_slice(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, cache_index, 0))
+        new_cache = MLACache(c_kv=ckv, k_rope=kr)
+        t = ckv.shape[1]
+        # absorb W_uk into the query: q_c (B,1,H,R)
+        q_c = jnp.einsum("bshn,rhn->bshr", q_nope,
+                         params["w_uk"]["w"].astype(compute_dtype))
+        scores = (
+            jnp.einsum("bshr,btr->bhst", q_c, ckv.astype(compute_dtype))
+            + jnp.einsum("bshk,btk->bhst", q_rope, kr.astype(compute_dtype))
+        ).astype(jnp.float32) * scale
+        valid = jnp.arange(t, dtype=jnp.int32)[None, None, None, :] <= cache_index
+        scores = jnp.where(valid, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+        ctx = jnp.einsum("bhst,btr->bshr", probs, ckv.astype(compute_dtype))
+        out = jnp.einsum("bshr,rhv->bshv", ctx,
+                         params["w_uv"]["w"].astype(compute_dtype))
+    else:
+        # ---- expanded prefill/train ----
+        k_nope = jnp.einsum("btr,rhn->bthn", c_kv,
+                            params["w_uk"]["w"].astype(compute_dtype))
+        k_nope = with_logical_constraint(
+            k_nope, ("batch", "seq", "heads", None))
+        v = jnp.einsum("btr,rhv->bthv", c_kv,
+                       params["w_uv"]["w"].astype(compute_dtype))
+        v = with_logical_constraint(v, ("batch", "seq", "heads", None))
+        k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))
+        k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        from repro.nn.attention import multihead_attention
+
+        out = multihead_attention(
+            q_full, k, v, positions, positions, causal=True,
+            softcap=cfg.logit_softcap)
+        if cache is not None:
+            ckv = jnp.zeros_like(cache.c_kv)
+            ckv = jax.lax.dynamic_update_slice(
+                ckv, c_kv.astype(ckv.dtype), (0, 0, 0))
+            kr = jnp.zeros_like(cache.k_rope)
+            kr = jax.lax.dynamic_update_slice(
+                kr, k_rope.astype(kr.dtype), (0, 0, 0))
+            new_cache = MLACache(c_kv=ckv, k_rope=kr)
+
+    out = jnp.einsum("bshv,hvd->bsd", out.astype(compute_dtype),
+                     params["o"]["w"].astype(compute_dtype))
+    out = with_logical_constraint(out, ("batch", "seq", None))
+    return out, new_cache

@@ -1,0 +1,45 @@
+"""Gated (SwiGLU/GeGLU) and plain MLP blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.common.sharding import with_logical_constraint
+from repro.nn.core import ParamSpec, fan_in_init
+
+
+def _act(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def mlp_spec(d_model: int, d_ff: int, glu: bool = True):
+    spec = {
+        "up": {"w": ParamSpec((d_model, d_ff), ("embed", "mlp"), fan_in_init(0))},
+        "down": {"w": ParamSpec((d_ff, d_model), ("mlp", "embed"), fan_in_init(0))},
+    }
+    if glu:
+        spec["gate"] = {"w": ParamSpec((d_model, d_ff), ("embed", "mlp"),
+                                       fan_in_init(0))}
+    return spec
+
+
+def mlp_apply(params, x: jnp.ndarray, cfg: ModelConfig,
+              compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    act = _act(cfg.act)
+    x = x.astype(compute_dtype)
+    up = jnp.einsum("bsd,df->bsf", x, params["up"]["w"].astype(compute_dtype))
+    if "gate" in params:
+        gate = jnp.einsum("bsd,df->bsf", x,
+                          params["gate"]["w"].astype(compute_dtype))
+        h = act(gate) * up
+    else:
+        h = act(up)
+    h = with_logical_constraint(h, ("batch", "seq", "mlp"))
+    y = jnp.einsum("bsf,fd->bsd", h, params["down"]["w"].astype(compute_dtype))
+    return with_logical_constraint(y, ("batch", "seq", None))

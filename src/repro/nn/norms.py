@@ -1,0 +1,45 @@
+"""RMSNorm / LayerNorm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.core import ParamSpec, ones_init, zeros_init
+
+
+def rmsnorm_spec(dim: int):
+    return {"scale": ParamSpec((dim,), ("embed",), ones_init())}
+
+
+def rmsnorm_apply(params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_spec(dim: int):
+    return {
+        "scale": ParamSpec((dim,), ("embed",), ones_init()),
+        "bias": ParamSpec((dim,), ("embed",), zeros_init()),
+    }
+
+
+def layernorm_apply(params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+def norm_spec(dim: int, use_layernorm: bool = False):
+    return layernorm_spec(dim) if use_layernorm else rmsnorm_spec(dim)
+
+
+def norm_apply(params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    if "bias" in params:
+        return layernorm_apply(params, x, eps)
+    return rmsnorm_apply(params, x, eps)

@@ -1,0 +1,141 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure (the paper's "recurrent block"):
+    x -> [linear -> causal depthwise conv1d -> RG-LRU] * gelu(linear gate) -> linear out
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)                 (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                 (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)       (data-dependent decay, c=8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` (parallel prefix) over the
+linear recurrence; decode is a single fused step carrying (h, conv buffer).
+State per token is O(width) — this is why recurrentgemma runs long_500k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.common.sharding import with_logical_constraint
+from repro.nn.core import ParamSpec, fan_in_init, uniform_init, zeros_init
+
+_C = 8.0
+
+
+@dataclasses.dataclass
+class RGLRUCache:
+    h: jnp.ndarray         # (B, W) recurrent state (fp32)
+    conv: jnp.ndarray      # (B, conv_width-1, W) conv tail buffer
+
+    @staticmethod
+    def logical_axes():
+        return {"h": ("batch", "state"), "conv": ("batch", None, "state")}
+
+
+jax.tree_util.register_dataclass(RGLRUCache, data_fields=["h", "conv"],
+                                 meta_fields=[])
+
+
+def rglru_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    cw = cfg.conv1d_width
+    return {
+        "in_x": {"w": ParamSpec((d, w), ("embed", "state"), fan_in_init(0))},
+        "in_gate": {"w": ParamSpec((d, w), ("embed", "state"), fan_in_init(0))},
+        "conv_w": ParamSpec((cw, w), ("conv", "state"), fan_in_init(0)),
+        "conv_b": ParamSpec((w,), ("state",), zeros_init()),
+        "gate_a": {"w": ParamSpec((w, w), ("state", None), fan_in_init(0))},
+        "gate_a_b": ParamSpec((w,), ("state",), zeros_init()),
+        "gate_x": {"w": ParamSpec((w, w), ("state", None), fan_in_init(0))},
+        "gate_x_b": ParamSpec((w,), ("state",), zeros_init()),
+        # Lambda init so that decay a in ~(0.9, 0.999) at r=1
+        "lam": ParamSpec((w,), ("state",), uniform_init(0.549, 4.833)),
+        "out": {"w": ParamSpec((w, d), ("state", "embed"), fan_in_init(0))},
+    }
+
+
+def _lru_gates(params, xw, compute_dtype):
+    """xw: (..., W) conv output -> (a, gated_input) both fp32."""
+    r = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", xw, params["gate_a"]["w"].astype(compute_dtype))
+        .astype(jnp.float32) + params["gate_a_b"])
+    i = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", xw, params["gate_x"]["w"].astype(compute_dtype))
+        .astype(jnp.float32) + params["gate_x_b"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r          # log decay <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = beta * (i * xw.astype(jnp.float32))
+    return a, gated
+
+
+def _causal_conv(params, x, cache_tail: Optional[jnp.ndarray], compute_dtype):
+    """Depthwise causal conv1d. x: (B,S,W); cache_tail: (B,cw-1,W) or None."""
+    cw = params["conv_w"].shape[0]
+    if cache_tail is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache_tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                    # (B, S+cw-1, W)
+    w = params["conv_w"].astype(compute_dtype)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(cw)
+    )
+    out = out + params["conv_b"].astype(compute_dtype)
+    new_tail = xp[:, -(cw - 1) :, :]
+    return out, new_tail
+
+
+def apply_rglru(
+    params,
+    x: jnp.ndarray,                # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    cache: Optional[RGLRUCache] = None,
+    compute_dtype=jnp.bfloat16,
+):
+    """Returns (y, new_cache)."""
+    b, s, d = x.shape
+    x = x.astype(compute_dtype)
+    xb = jnp.einsum("bsd,dw->bsw", x, params["in_x"]["w"].astype(compute_dtype))
+    gate = jnp.einsum("bsd,dw->bsw", x,
+                      params["in_gate"]["w"].astype(compute_dtype))
+    xb = with_logical_constraint(xb, ("batch", "seq", "state"))
+
+    tail = cache.conv if cache is not None else None
+    xw, new_tail = _causal_conv(params, xb, tail, compute_dtype)
+    a, gated = _lru_gates(params, xw, compute_dtype)          # fp32
+
+    h0 = cache.h if cache is not None else jnp.zeros((b, xb.shape[-1]),
+                                                     jnp.float32)
+    if s == 1 and cache is not None:
+        # decode: one fused step
+        h = a[:, 0] * h0 + gated[:, 0]
+        hs = h[:, None, :]
+    else:
+        # parallel linear recurrence: h_t = a_t h_{t-1} + g_t
+        # fold initial state into the first element
+        g0 = gated.at[:, 0].add(a[:, 0] * h0) if cache is not None else gated
+
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(combine, (a, g0), axis=1)
+        h = hs[:, -1]
+
+    y = jnp.einsum("bsw,wd->bsd", (hs * jax.nn.gelu(gate.astype(jnp.float32)))
+                   .astype(compute_dtype),
+                   params["out"]["w"].astype(compute_dtype))
+    y = with_logical_constraint(y, ("batch", "seq", None))
+    new_cache = RGLRUCache(h=h, conv=new_tail.astype(jnp.float32)) \
+        if cache is not None else None
+    return y, new_cache

@@ -1,0 +1,34 @@
+"""Rotary position embeddings, supporting position offsets for decode."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(
+    x: jnp.ndarray,           # (B, S, H, Dh)
+    positions: jnp.ndarray,   # (B, S) int32 absolute positions
+    theta: float = 10000.0,
+) -> jnp.ndarray:
+    dtype = x.dtype
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+def sinusoidal_positions(seq_len: int, dim: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal position embeddings (B-free, (S, D))."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    half = dim // 2
+    inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

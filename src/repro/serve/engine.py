@@ -1,0 +1,98 @@
+"""Batched serving engine: aligned-batch prefill + decode with KV caches.
+
+Continuous-batching-lite: a fixed number of slots; queued requests are
+admitted in waves (a wave = one aligned prefill), then decoded step-locked
+until every member finishes (EOS or max_new_tokens). This matches the
+aligned-index cache design in models/model.py and is what serve_step
+lowers for the decode dry-run shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1                    # -1: never stops early
+    out_tokens: Optional[list] = None
+
+
+class ServingEngine:
+    def __init__(self, model, params, max_batch: int = 8,
+                 pad_id: int = 0):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.pad_id = pad_id
+        self.queue: list[Request] = []
+        self._decode_fn = jax.jit(model.decode_step)
+        self.stats = {"prefills": 0, "decode_steps": 0, "requests": 0,
+                      "prefill_s": 0.0, "decode_s": 0.0}
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+        self.stats["requests"] += 1
+
+    def _wave(self, reqs: list[Request], extras: Optional[dict] = None):
+        max_len = max(len(r.prompt) for r in reqs)
+        b = len(reqs)
+        toks = np.full((b, max_len), self.pad_id, np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, max_len - len(r.prompt):] = r.prompt     # left-pad
+        max_new = max(r.max_new_tokens for r in reqs)
+        total = max_len + max_new + (self.model.cfg.prefix_len or 0)
+
+        batch = {"tokens": jnp.asarray(toks), **(extras or {})}
+        t0 = time.perf_counter()
+        logits, state = self.model.prefill(self.params, batch, seq_len=total)
+        self.stats["prefills"] += 1
+        self.stats["prefill_s"] += time.perf_counter() - t0
+
+        current = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        done = np.zeros(b, bool)
+        for r in reqs:
+            r.out_tokens = []
+        t0 = time.perf_counter()
+        for step in range(max_new):
+            cur_np = np.asarray(current)
+            for i, r in enumerate(reqs):
+                if not done[i]:
+                    tok = int(cur_np[i])
+                    r.out_tokens.append(tok)
+                    if tok == r.eos_id or len(r.out_tokens) >= r.max_new_tokens:
+                        done[i] = True
+            if done.all():
+                break
+            logits, state = self._decode_fn(self.params, state,
+                                            current[:, None])
+            self.stats["decode_steps"] += 1
+            current = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.stats["decode_s"] += time.perf_counter() - t0
+
+    def run(self, extras_fn=None) -> list[Request]:
+        """Drain the queue in waves of up to max_batch."""
+        finished = []
+        while self.queue:
+            wave = self.queue[: self.max_batch]
+            self.queue = self.queue[self.max_batch:]
+            extras = extras_fn(len(wave)) if extras_fn else None
+            self._wave(wave, extras)
+            finished.extend(wave)
+        return finished
+
+
+def make_serve_step(model):
+    """The decode-shape dry-run entry point: one aligned decode step."""
+
+    def serve_step(params, state, tokens):
+        return model.decode_step(params, state, tokens)
+
+    return serve_step

@@ -1,0 +1,66 @@
+"""Checkpointing: params/optimizer pytrees <-> .npz with path-keyed arrays.
+Restore can re-place leaves onto a mesh via a shardings tree."""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+
+    def visit(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        flat[name] = np.asarray(leaf)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return flat
+
+
+def save_checkpoint(path: str, params: Any,
+                    opt_state: Optional[Any] = None,
+                    step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    payload["meta/step"] = np.asarray(step)
+    np.savez(path, **payload)
+
+
+def restore_checkpoint(path: str, params_like: Any,
+                       opt_like: Optional[Any] = None,
+                       shardings: Optional[Any] = None):
+    """Returns (params, opt_state, step); trees must match what was saved."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+
+    def rebuild(prefix: str, like: Any, shard_tree: Optional[Any]):
+        names = []
+
+        def collect(p, leaf):
+            names.append("/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                                  for k in p))
+            return leaf
+
+        jax.tree_util.tree_map_with_path(collect, like)
+        leaves_like, treedef = jax.tree.flatten(like)
+        shard_leaves = (jax.tree.flatten(shard_tree)[0]
+                        if shard_tree is not None else [None] * len(names))
+        out = []
+        for name, leaf, sh in zip(names, leaves_like, shard_leaves):
+            arr = jnp.asarray(data[f"{prefix}/{name}"], leaf.dtype)
+            if sh is not None:
+                arr = jax.device_put(arr, sh)
+            out.append(arr)
+        return jax.tree.unflatten(treedef, out)
+
+    params = rebuild("params", params_like, shardings)
+    opt_state = rebuild("opt", opt_like, None) if opt_like is not None else None
+    step = int(data["meta/step"])
+    return params, opt_state, step

@@ -1,0 +1,133 @@
+"""Optimizers: AdamW (fp32 states, sharded like their parameters) and the
+GaLore-style low-rank projection whose projector is refreshed by the
+*offloaded* randomized SVD — the paper's §4.2 routine serving the trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import TrainConfig
+from repro.common.pytree import global_norm
+
+
+def lr_schedule(tc: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay."""
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - tc.warmup_steps)
+                    / jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads: Any, state: dict, params: Any,
+                 tc: TrainConfig) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tc.grad_clip / (gnorm + 1e-9))
+    lr = lr_schedule(tc, step.astype(jnp.float32))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = tc.b1 * m + (1 - tc.b1) * g
+        v = tc.b2 * v + (1 - tc.b2) * jnp.square(g)
+        mhat = m / (1 - tc.b1 ** step)
+        vhat = v / (1 - tc.b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + tc.eps) + tc.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics
+
+
+# ---------------------------------------------------------------------------
+# GaLore with Alchemist-offloaded projector refresh
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class GaLoreState:
+    """Projectors for each eligible parameter (path -> P of shape (rows, r)
+    or (layers, rows, r) for stacked params)."""
+
+    projectors: dict[str, jnp.ndarray]
+    rank: int
+
+
+def eligible_for_galore(path: str, leaf, rank: int) -> bool:
+    if leaf.ndim == 2:
+        return min(leaf.shape) > 4 * rank
+    if leaf.ndim == 3:  # stacked (layers, rows, cols)
+        return min(leaf.shape[1:]) > 4 * rank
+    return False
+
+
+def refresh_projectors(ac, grads: Any, rank: int,
+                       seed: int = 0) -> GaLoreState:
+    """Compute top-`rank` left singular bases of each eligible gradient via
+    the *offloaded* randomized SVD (engine-side; the client only ships the
+    gradient and receives the small basis — the Alchemist pattern)."""
+    from repro.core.context import AlMatrix
+
+    projectors: dict[str, jnp.ndarray] = {}
+
+    def visit(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if not eligible_for_galore(name, leaf, rank):
+            return leaf
+        mats = leaf[None] if leaf.ndim == 2 else leaf
+        ps = []
+        for i in range(mats.shape[0]):
+            al = ac.send_matrix(jnp.asarray(mats[i], jnp.float32))
+            res = ac.call("elemental", "randomized_svd", A=al, k=rank,
+                          seed=seed)
+            u = ac.engine.get(res["U"])
+            ps.append(u)
+            al.free()
+        p = jnp.stack(ps) if leaf.ndim == 3 else ps[0]
+        projectors[name] = p
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, grads)
+    return GaLoreState(projectors=projectors, rank=rank)
+
+
+def project_grads(grads: Any, gal: GaLoreState) -> Any:
+    """g -> P P^T g : rank-r column-space compression of each eligible grad
+    (applied before the optimizer; states stay full-shape for simplicity —
+    the memory win of true-GaLore is orthogonal to the offload pattern we
+    demonstrate)."""
+
+    def visit(path, g):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        p = gal.projectors.get(name)
+        if p is None:
+            return g
+        gf = g.astype(jnp.float32)
+        if g.ndim == 2:
+            return (p @ (p.T @ gf)).astype(g.dtype)
+        return jnp.einsum("lir,lrj->lij", p,
+                          jnp.einsum("lir,lij->lrj", p, gf)).astype(g.dtype)
+
+    return jax.tree_util.tree_map_with_path(visit, grads)

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# src-layout import path (tests run with PYTHONPATH=src, but be robust)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,59 @@
+"""Deliverable-integrity checks: the dry-run artifact sets are complete and
+well-formed (these are what EXPERIMENTS.md §Dry-run/§Roofline read)."""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.common.config import SHAPES
+from repro.configs import ASSIGNED, get_config, supports_shape
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_DIR = os.path.join(REPO, "results", "dryrun")
+
+_HAVE_ARTIFACTS = bool(glob.glob(os.path.join(BASELINE_DIR, "*.json")))
+needs_artifacts = pytest.mark.skipif(
+    not _HAVE_ARTIFACTS, reason="run repro.launch.dryrun --all first")
+
+
+def _expected_combos():
+    combos = []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            if supports_shape(cfg, shape):
+                combos.append((arch, shape_name))
+    combos.append(("qwen3-4b-sw", "long_500k"))
+    return combos
+
+
+@needs_artifacts
+@pytest.mark.parametrize("mesh", ["pod16x16", "pod2x16x16"])
+def test_every_supported_combo_has_a_baseline_artifact(mesh):
+    missing = []
+    for arch, shape in _expected_combos():
+        path = os.path.join(BASELINE_DIR, f"{arch}_{shape}_{mesh}.json")
+        if not os.path.exists(path):
+            missing.append((arch, shape))
+    assert not missing, missing
+
+
+@needs_artifacts
+def test_artifacts_are_well_formed():
+    for path in glob.glob(os.path.join(BASELINE_DIR, "*.json")):
+        data = json.load(open(path))
+        r = data["roofline"]
+        assert r["dominant"] in ("compute", "memory", "collective"), path
+        assert r["model_flops"] > 0, path
+        assert data["chips"] in (256, 512), path
+        assert data["compile_s"] > 0, path
+        # decode shapes must never report zero-size caches for cache archs
+        if data["shape"] in ("decode_32k", "long_500k"):
+            assert data["memory_analysis"]["argument_size_bytes"] > 0, path
+
+
+def test_expected_combo_count_matches_design():
+    """10 archs x 4 shapes minus documented long_500k skips + the sw
+    variant = 33 combos per mesh (DESIGN.md §5)."""
+    assert len(_expected_combos()) == 33

@@ -1,0 +1,93 @@
+"""Tests for the extension features: fused normal-matvec kernel, NMF
+routine, offloaded linear-head fitting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AlchemistContext
+from repro.core.libraries import elemental, skylark
+from repro.kernels.normal_matvec.normal_matvec import normal_matvec_pallas
+from repro.kernels.normal_matvec.ops import normal_matvec
+from repro.kernels.normal_matvec.ref import normal_matvec_ref
+
+
+@pytest.mark.parametrize("n,d,c", [(256, 64, 4), (300, 128, 1),
+                                   (512, 440, 16), (1000, 37, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_normal_matvec_matches_ref(n, d, c, dtype):
+    key = jax.random.PRNGKey(n + d + c)
+    x = jax.random.normal(key, (n, d), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (d, c), jnp.float32)
+    got = normal_matvec(x, w, use_pallas=True, bm=128)
+    want = normal_matvec_ref(x, w)
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * float(jnp.abs(want).max()))
+
+
+def test_normal_matvec_padding_is_exact():
+    """Zero-row padding must not perturb X^T X w."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (130, 32), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 2), jnp.float32)
+    got = normal_matvec(x, w, use_pallas=True, bm=128)   # pads 130 -> 256
+    want = normal_matvec_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-4)
+
+
+def test_cg_with_fused_kernel_matches_direct():
+    ac = AlchemistContext(num_workers=1)
+    ac.register_library("skylark", skylark)
+    rng = np.random.RandomState(0)
+    x = rng.randn(256, 24).astype(np.float32)
+    y = rng.randn(256, 2).astype(np.float32)
+    res = ac.call("skylark", "cg_solve", X=ac.send_matrix(x),
+                  Y=ac.send_matrix(y), lam=1e-3, max_iters=300, tol=1e-10,
+                  use_pallas=True)
+    w = ac.wrap(res["W"]).to_numpy()
+    want = np.linalg.solve(x.T @ x + 256 * 1e-3 * np.eye(24), x.T @ y)
+    np.testing.assert_allclose(w, want, atol=1e-4)
+
+
+def test_nmf_reduces_residual_and_stays_nonnegative():
+    ac = AlchemistContext(num_workers=1)
+    ac.register_library("skylark", skylark)
+    rng = np.random.RandomState(0)
+    truth = rng.rand(80, 4) @ rng.rand(4, 30)
+    res = ac.call("skylark", "nmf", A=ac.send_matrix(truth), k=4,
+                  max_iters=200)
+    w = ac.wrap(res["W"]).to_numpy()
+    h = ac.wrap(res["H"]).to_numpy()
+    assert (w >= 0).all() and (h >= 0).all()
+    assert res["relative_residual"] < 0.05
+    np.testing.assert_allclose(w @ h, truth, atol=0.3)
+
+
+def test_offloaded_linear_probe_beats_chance():
+    from repro.common.config import ShapeConfig
+    from repro.configs import get_reduced
+    from repro.data.pipeline import SyntheticLM
+    from repro.models.model import build_model
+    from repro.nn.core import init_params
+    from repro.train.offload import (
+        extract_features,
+        fit_linear_head_cg,
+        head_accuracy,
+    )
+
+    cfg = get_reduced("stablelm-1.6b")
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+    shape = ShapeConfig("probe", seq_len=16, global_batch=16, mode="train")
+    data = SyntheticLM(cfg, shape, seed=0, bigram_q=1.0)
+    feats, labels = extract_features(
+        model, params, (data.batch(i) for i in range(6)), max_batches=6)
+    # restrict to a small label space for a learnable probe
+    labels = labels % 8
+
+    ac = AlchemistContext(num_workers=1)
+    ac.register_library("skylark", skylark)
+    w, res = fit_linear_head_cg(ac, feats, labels, num_classes=8, lam=1e-4)
+    acc = head_accuracy(w, feats, labels)
+    assert acc > 1.5 / 8, acc          # comfortably above the 1/8 chance

@@ -1,0 +1,71 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs pure-jnp oracle,
+across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.gram.ops import gram
+from repro.kernels.gram.ref import gram_ref
+from repro.kernels.rf_map.ops import rf_map_apply
+from repro.kernels.rf_map.ref import rf_map_ref, rf_weights
+from repro.kernels.swa.ops import swa_attention
+
+
+@pytest.mark.parametrize("n,d", [(256, 128), (512, 256), (384, 200),
+                                 (1000, 64), (128, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_matches_ref(n, d, dtype):
+    a = jax.random.normal(jax.random.PRNGKey(n + d), (n, d), dtype)
+    got = gram(a, use_pallas=True, bm=256, bn=128)
+    want = gram_ref(a)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * np.abs(want).max())
+
+
+@pytest.mark.parametrize("n,d,dd", [(256, 128, 256), (300, 70, 200),
+                                    (512, 440, 1024), (100, 33, 77)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rf_map_matches_ref(n, d, dd, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d), dtype)
+    w, b = rf_weights(d, dd, bandwidth=2.0, seed=1)
+    got = rf_map_apply(x, w, b, use_pallas=True)
+    want = rf_map_ref(x, w, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("s,window,bq,bk", [
+    (128, 32, 64, 64), (256, 96, 64, 64), (256, 256, 128, 128),
+    (512, 128, 128, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_matches_ref(s, window, bq, bk, dtype):
+    key = jax.random.PRNGKey(s + window)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (2, 4, s, 32), dtype)
+    k = jax.random.normal(kk, (2, 2, s, 32), dtype)
+    v = jax.random.normal(kv, (2, 2, s, 32), dtype)
+    got = swa_attention(q, k, v, window=window, use_pallas=True, bq=bq, bk=bk)
+    want = swa_attention(q, k, v, window=window, use_pallas=False)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_swa_equals_full_attention_when_window_covers_seq():
+    """window >= S must reduce to plain causal attention."""
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (1, 2, 128, 32), jnp.float32)
+    got = swa_attention(q, q, q, window=128, use_pallas=True, bq=64, bk=64)
+    # plain causal reference
+    s = 128
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, q) * 32 ** -0.5
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, -2e38)
+    want = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(scores, -1), q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

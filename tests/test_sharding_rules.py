@@ -1,0 +1,100 @@
+"""Property tests for the logical-sharding core (hypothesis): every spec
+produced must divide the dims it shards, never reuse a mesh axis within a
+tensor, and respect claim-order priority."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+from jax.sharding import Mesh
+
+from repro.common.sharding import DEFAULT_RULES, make_rules
+
+AXIS_NAMES = [None, "batch", "seq", "cache_seq", "layers", "vocab", "embed",
+              "mlp", "heads", "kv_heads", "experts", "state", "act_seq"]
+
+
+def _mesh(shape=(1,), axes=("data",)):
+    dev = np.array(jax.devices()[:1])
+    # fake multi-axis mesh over one device is invalid; instead build the
+    # rules against mesh metadata only via a size-1 mesh when needed.
+    return Mesh(dev.reshape(shape), axes)
+
+
+class _FakeMesh:
+    """Mesh stand-in with arbitrary axis sizes (rules only read metadata)."""
+
+    def __init__(self, sizes: dict):
+        self.axis_names = tuple(sizes)
+        self._shape = tuple(sizes.values())
+
+    @property
+    def devices(self):
+        class _D:
+            def __init__(self, shape):
+                self.shape = shape
+                self.size = int(np.prod(shape))
+
+        return _D(self._shape)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 4096), min_size=1, max_size=5),
+    names=st.lists(st.sampled_from(AXIS_NAMES), min_size=1, max_size=5),
+    data=st.integers(1, 16),
+    model=st.integers(1, 16),
+    pod=st.integers(1, 4),
+)
+def test_spec_always_divides_and_never_reuses_axes(dims, names, data,
+                                                   model, pod):
+    n = min(len(dims), len(names))
+    dims, names = dims[:n], names[:n]
+    mesh = _FakeMesh({"pod": pod, "data": data, "model": model})
+    rules = make_rules(mesh)  # type: ignore[arg-type]
+    spec = rules.spec_for(dims, names)
+    sizes = {"pod": pod, "data": data, "model": model}
+    seen = set()
+    for dim, entry in zip(dims, tuple(spec)):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else entry
+        total = 1
+        for a in axes:
+            assert a not in seen, "mesh axis used twice"
+            seen.add(a)
+            total *= sizes[a]
+        assert dim % total == 0, (dim, axes, total)
+
+
+@settings(max_examples=100, deadline=None)
+@given(data=st.integers(2, 16), model=st.integers(2, 16))
+def test_claim_order_gives_priority(data, model):
+    """With claim_order, a later-listed dim must not steal an axis a
+    higher-priority dim could use."""
+    mesh = _FakeMesh({"data": data, "model": model})
+    rules = make_rules(mesh)  # type: ignore[arg-type]
+    # (layers, batch): both want 'data'; batch must win under its priority
+    shape = (data * 4, data * 8)
+    spec = rules.spec_for(shape, ("layers", "batch"), claim_order=[1, 0])
+    assert tuple(spec)[1] is not None and "data" in (
+        tuple(spec)[1] if isinstance(tuple(spec)[1], tuple)
+        else (tuple(spec)[1],))
+    assert tuple(spec)[0] in (None, "model")  # layers lost 'data'
+
+
+def test_batch_claims_pod_and_data_when_divisible():
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    rules = make_rules(mesh)  # type: ignore[arg-type]
+    spec = rules.spec_for((256, 4096), ("batch", "seq"))
+    assert tuple(spec)[0] == ("pod", "data")
+    spec1 = rules.spec_for((1, 4096), ("batch", "seq"))   # long_500k batch=1
+    assert tuple(spec1)[0] is None
+
+
+def test_partial_multiaxis_claim():
+    """batch=8 on (pod=2, data=16): only pod divides — keep just pod."""
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    rules = make_rules(mesh)  # type: ignore[arg-type]
+    spec = rules.spec_for((8,), ("batch",))
+    assert tuple(spec)[0] == "pod"
