@@ -1,6 +1,7 @@
 """Quickstart: the paper's Fig. 2 workflow — offload a QR decomposition from
 the client (Spark-analogue) to the Alchemist engine and bring the factors
-back as row matrices.
+back as row matrices — plus a second concurrent client session sharing the
+same engine (§3.1.1).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,14 +14,19 @@ from repro.frontend.rowmatrix import RowMatrix
 
 def main():
     # sc = SparkContext ... in the paper; here the client is this process.
+    # Constructing the context performs the connect handshake: the engine
+    # mints a session that namespaces every handle this client creates.
     ac = AlchemistContext(num_workers=4)            # AlchemistContext(sc, n)
     ac.register_library("elemental", elemental)     # ac.registerLibrary(...)
+    print(f"connected as session #{ac.session} "
+          f"({ac.num_workers_granted} engine workers granted)")
 
     # A row-partitioned client matrix (IndexedRowMatrix analogue).
     a = RowMatrix.random(4096, 256, num_partitions=8, seed=0)
 
     al_a = ac.send_matrix(a)                        # val alA = AlMatrix(A)
-    print(f"sent {al_a.shape} -> handle #{al_a.handle.id}; "
+    print(f"sent {al_a.shape} -> handle #{al_a.handle.id} in "
+          f"{al_a.last_transfer.num_chunks} streamed chunk(s); "
           f"modeled socket cost {al_a.last_transfer.modeled_socket_s:.3f}s, "
           f"TPU reshard cost {al_a.last_transfer.modeled_reshard_s * 1e6:.1f}us")
 
@@ -32,6 +38,15 @@ def main():
     r = ac.wrap(res["R"]).to_row_matrix()
     err = np.abs(q.collect() @ r.collect() - a.collect()).max()
     print(f"reconstruction max-error: {err:.2e}")
+
+    # A second Spark application attaches to the same engine: its handle
+    # namespace is isolated, so handle IDs never clobber across clients.
+    ac2 = AlchemistContext(engine=ac.engine, client_name="second-app")
+    res2 = ac2.call("elemental", "random_matrix", rows=512, cols=64, seed=1)
+    clients = [s for s in ac.engine.sessions() if s.client != "system"]
+    print(f"session #{ac2.session} made its own handle #{res2['A'].id}; "
+          f"engine now serves {len(clients)} client sessions")
+    ac2.stop()                                      # engine reclaims its handles
 
     ac.stop()
 

@@ -11,6 +11,14 @@ Usage mirrors the paper's Fig. 2:
     q, r = ac.call("elemental", "qr", A=al_a.handle)
     Q = AlMatrix.from_handle(ac, q).to_row_matrix()
     ac.stop()
+
+Constructing a context performs the connect handshake against the engine
+(§3.1.1): the engine mints a session ID that scopes every later transfer
+and routine call to this client's handle namespace. Several contexts can
+attach to one engine concurrently — the paper's multiple Spark
+applications sharing one Alchemist instance — without clobbering each
+other's handles. ``stop()`` sends the disconnect, and the engine reclaims
+everything this session still owns.
 """
 from __future__ import annotations
 
@@ -29,39 +37,67 @@ class AlchemistError(RuntimeError):
 
 
 class AlchemistContext:
-    """One client session against an engine. Multiple contexts may share an
-    engine (the paper's concurrent Spark applications), each with its own
-    session id and transfer accounting."""
+    """One client session against an engine (one attached Spark driver).
 
-    _SESSIONS = 0
+    Multiple contexts may share an engine (the paper's concurrent Spark
+    applications), each with its own engine-minted session ID, isolated
+    handle namespace, and transfer accounting. ``chunk_rows`` sets the
+    default row-block size for streamed transfers (None = auto-size
+    chunks to ~``transfer.DEFAULT_CHUNK_BYTES``).
+    """
 
     def __init__(self, num_workers: Optional[int] = None,
-                 engine: Optional[AlchemistEngine] = None):
+                 engine: Optional[AlchemistEngine] = None,
+                 client_name: str = "", chunk_rows: Optional[int] = None):
         if engine is None:
             engine = AlchemistEngine(make_engine_mesh(num_workers))
         self.engine = engine
-        AlchemistContext._SESSIONS += 1
-        self.session = AlchemistContext._SESSIONS
+        self.chunk_rows = chunk_rows
         self._stopped = False
+        res = protocol.decode_result(engine.handshake(
+            protocol.encode_handshake(protocol.Handshake(
+                action=protocol.CONNECT, client=client_name))))
+        if res.error:
+            raise AlchemistError(res.error)
+        self.session = res.values["session"]
+        self.num_workers_granted = res.values["workers"]
 
     # ---- library registration ----
     def register_library(self, name: str, module) -> None:
+        """Ask the engine to load an ALI library module (§3.1.3).
+        Libraries are engine-global: every attached session can call them."""
         self._check_alive()
         self.engine.load_library(name, module)
 
-    # ---- data movement ----
-    def send_matrix(self, matrix, name: Optional[str] = None) -> "AlMatrix":
+    # ---- data movement (the streaming transfer layer, §3.2) ----
+    def send_matrix(self, matrix, name: Optional[str] = None,
+                    chunk_rows: Optional[int] = None) -> "AlMatrix":
+        """Stream a client matrix to the engine in row-block chunks and
+        wrap the resulting session-owned handle."""
         self._check_alive()
-        handle, rec = transfer.to_engine(self.engine, matrix, name=name)
+        handle, rec = transfer.to_engine(
+            self.engine, matrix, name=name, session=self.session,
+            chunk_rows=chunk_rows if chunk_rows is not None
+            else self.chunk_rows)
         return AlMatrix(self, handle, last_transfer=rec)
 
-    def fetch(self, handle: MatrixHandle, num_partitions: int = 8) -> RowMatrix:
+    def fetch(self, handle: MatrixHandle, num_partitions: int = 8,
+              chunk_rows: Optional[int] = None) -> RowMatrix:
+        """Stream an engine matrix back as a RowMatrix (§3.3.2's
+        ``toIndexedRowMatrix()``). Only handles visible to this session
+        may be fetched."""
         self._check_alive()
-        rm, _ = transfer.to_client(self.engine, handle, num_partitions)
+        rm, _ = transfer.to_client(
+            self.engine, handle, num_partitions, session=self.session,
+            chunk_rows=chunk_rows if chunk_rows is not None
+            else self.chunk_rows)
         return rm
 
-    # ---- routine invocation (serialized command channel) ----
+    # ---- routine invocation (serialized command channel, §3.1.2) ----
     def call(self, library: str, routine: str, **kwargs) -> dict[str, Any]:
+        """Invoke one ALI routine through the wire protocol. Handle args
+        resolve inside this session's namespace on the engine side; the
+        result dict carries routine outputs plus ``_elapsed`` seconds."""
         self._check_alive()
         args = {
             k: (v.handle if isinstance(v, AlMatrix) else v)
@@ -77,10 +113,22 @@ class AlchemistContext:
         return out
 
     def wrap(self, handle: MatrixHandle) -> "AlMatrix":
+        """Wrap an engine handle (e.g. a routine output) as an AlMatrix."""
         return AlMatrix(self, handle)
 
+    def free(self, handle: MatrixHandle) -> None:
+        """Release one reference to a session-visible handle."""
+        self._check_alive()
+        self.engine.free(handle, session=self.session)
+
     def stop(self) -> None:
+        """Disconnect: the engine reclaims every handle this session still
+        owns (the paper's driver detach). Idempotent."""
+        if self._stopped:
+            return
         self._stopped = True
+        self.engine.handshake(protocol.encode_handshake(protocol.Handshake(
+            action=protocol.DISCONNECT, session=self.session)))
 
     def _check_alive(self):
         if self._stopped:
@@ -88,7 +136,9 @@ class AlchemistContext:
 
 
 class AlMatrix:
-    """Client-side proxy for an engine-resident distributed matrix."""
+    """Client-side proxy for an engine-resident distributed matrix
+    (§3.3.2). Holds only the handle — the data stays on the engine until
+    explicitly materialized."""
 
     def __init__(self, ac: AlchemistContext, data_or_handle,
                  last_transfer=None):
@@ -110,10 +160,12 @@ class AlMatrix:
         return self.handle.shape
 
     def to_row_matrix(self, num_partitions: int = 8) -> RowMatrix:
+        """Materialize on the client (streams back chunk-by-chunk)."""
         return self.ac.fetch(self.handle, num_partitions)
 
     def to_numpy(self) -> np.ndarray:
         return self.to_row_matrix().collect()
 
     def free(self) -> None:
-        self.ac.engine.free(self.handle)
+        """Release this proxy's reference on the engine."""
+        self.ac.free(self.handle)

@@ -43,6 +43,15 @@ _CAL_ROWS = 2_251_569
 ICI_BW = 50e9                             # bytes/s per link
 DCN_BW = 25e9                             # bytes/s per host, cross-slice
 
+# ---- streaming (chunked) transfer constants ----
+# The paper's sends are socket-buffered: each row-block message pays a fixed
+# per-message cost (syscall + TCP round trip + Elemental re-layout staging)
+# before the payload streams at the Table-3 rate. Small chunks are overhead
+# bound; large chunks lose send/receive pipelining. 2019's Cray follow-up
+# (Rothauge et al.) reports exactly this trade-off when tuning buffer sizes.
+CHUNK_LATENCY_S = 2.5e-4                  # per-chunk fixed cost, seconds
+PIPELINE_FRACTION = 0.35                  # overlap of send with re-layout
+
 
 def socket_transfer_seconds(nbytes: int, client_procs: int,
                             engine_procs: int) -> float:
@@ -51,6 +60,24 @@ def socket_transfer_seconds(nbytes: int, client_procs: int,
     rate = _RATE_C * lo ** _RATE_P
     penalty = 1.0 + _IMBALANCE * (hi / lo - 1.0)
     return nbytes / GB / rate * penalty
+
+
+def stream_transfer_seconds(nbytes: int, chunk_bytes: int,
+                            client_procs: int, engine_procs: int) -> float:
+    """Modeled chunked-socket transfer time (§3.2 streaming path).
+
+    ``nbytes`` total payload split into ``chunk_bytes`` messages: each pays
+    :data:`CHUNK_LATENCY_S`, while chunking overlaps the wire send with the
+    engine-side re-layout for every chunk except the last (the
+    :data:`PIPELINE_FRACTION` discount). Minimized at a mid-size chunk —
+    the sweep in ``benchmarks/table3_transfer.py`` exposes the curve.
+    """
+    chunk_bytes = max(1, int(chunk_bytes))
+    num_chunks = max(1, -(-int(nbytes) // chunk_bytes))
+    wire = socket_transfer_seconds(nbytes, client_procs, engine_procs)
+    if num_chunks > 1:
+        wire *= 1.0 - PIPELINE_FRACTION * (num_chunks - 1) / num_chunks
+    return num_chunks * CHUNK_LATENCY_S + wire
 
 
 def spark_cg_iteration_seconds(nodes: int, rows: int, features: int) -> float:
@@ -75,10 +102,19 @@ def reshard_transfer_seconds(nbytes: int, chips: int,
 
 @dataclasses.dataclass
 class TransferRecord:
+    """One boundary crossing. With the streaming path (§3.2) a single
+    logical matrix send produces one record per row-block chunk:
+    ``chunk_index`` in ``[0, num_chunks)`` positions the chunk, ``session``
+    names the client session that moved the bytes. ``chunk_index == -1``
+    marks a whole-stream *aggregate* record (what ``transfer.to_engine``/
+    ``to_client`` return to the caller; never appended to the log)."""
     nbytes: int
     direction: str                # "to_engine" | "to_client"
     modeled_socket_s: float
     modeled_reshard_s: float
+    session: int = 0
+    chunk_index: int = 0
+    num_chunks: int = 1
 
 
 class TransferLog:
@@ -91,13 +127,19 @@ class TransferLog:
         self.chips = chips
         self.records: list[TransferRecord] = []
 
-    def record(self, nbytes: int, direction: str) -> TransferRecord:
+    def record(self, nbytes: int, direction: str, session: int = 0,
+               chunk_index: int = 0, num_chunks: int = 1) -> TransferRecord:
+        """Log one crossing (one chunk of a streamed send, or a whole
+        single-shot send) and return the record with its modeled costs."""
         rec = TransferRecord(
             nbytes=int(nbytes),
             direction=direction,
             modeled_socket_s=socket_transfer_seconds(
                 nbytes, self.client_procs, self.engine_procs),
             modeled_reshard_s=reshard_transfer_seconds(nbytes, self.chips),
+            session=session,
+            chunk_index=chunk_index,
+            num_chunks=num_chunks,
         )
         self.records.append(rec)
         return rec
@@ -109,3 +151,7 @@ class TransferLog:
     @property
     def total_socket_seconds(self) -> float:
         return sum(r.modeled_socket_s for r in self.records)
+
+    def session_bytes(self, session: int) -> int:
+        """Total bytes a given client session moved across the bridge."""
+        return sum(r.nbytes for r in self.records if r.session == session)

@@ -1,10 +1,23 @@
-"""The Alchemist engine: the high-performance side of the bridge.
+"""The Alchemist engine: the high-performance side of the bridge (§3.1.1).
 
-The engine owns (a) a *worker mesh* — the analogue of the MPI processes
-hosting Elemental — and (b) the handle table mapping MatrixHandle IDs to
-engine-resident distributed arrays (2D block sharding = Elemental
-DistMatrix). Library routines run on the engine mesh via shard_map/pjit,
-driven through the protocol layer so only serializable values cross.
+The engine owns
+
+* a *worker mesh* — the analogue of the MPI processes hosting Elemental
+  (2D block sharding = Elemental DistMatrix); library routines run on it
+  via shard_map/pjit, driven through the protocol layer so only
+  serializable values cross;
+* a *session table* — the paper's multiple Spark drivers attached to one
+  Alchemist instance concurrently (§3.1.1: "Alchemist can serve several
+  Spark applications at a time"). Each ``connect`` handshake mints a
+  ``Session`` with its own handle namespace; commands from different
+  clients are serialized through a FIFO dispatch queue so they never
+  interleave mid-routine or clobber each other's handle tables;
+* a *handle lifecycle layer* — refcounted entries under an optional engine
+  memory budget, with LRU spill-to-host eviction and transparent reload on
+  next use (the engine-side answer to the paper's observation that matrices
+  must stay resident across chained calls, §3.3.2, without unbounded
+  growth), plus ``free_session`` reclaiming everything a disconnected
+  client left behind.
 
 On this CPU container the worker mesh is however many devices exist (1);
 the same code lowers onto a real multi-chip engine mesh unchanged — the
@@ -13,11 +26,14 @@ launched on "a user-specified number of nodes" (§3.1.1).
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
+import itertools
+import threading
 import time
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -25,8 +41,12 @@ from repro.core import protocol
 from repro.core.costmodel import TransferLog
 from repro.core.handles import MatrixHandle
 
+SYSTEM_SESSION = 0
+
 
 def make_engine_mesh(num_workers: Optional[int] = None) -> Mesh:
+    """Build the engine's worker mesh from available devices (§3.1.1 —
+    Alchemist launched on a user-specified number of nodes)."""
     devices = jax.devices()
     n = min(num_workers or len(devices), len(devices))
     return Mesh(np.array(devices[:n]).reshape(n), ("workers",))
@@ -36,22 +56,176 @@ class LibraryNotRegistered(KeyError):
     pass
 
 
+class UnknownSession(KeyError):
+    pass
+
+
+@dataclasses.dataclass
+class Session:
+    """Per-client engine state (§3.1.1: one attached Spark driver).
+
+    ``owned`` is the session's handle namespace: the IDs of every
+    engine-resident matrix this client created (by transfer or as routine
+    output). Protocol-level handle resolution is confined to this set plus
+    the system namespace, so concurrent clients cannot read or free each
+    other's matrices.
+    """
+    id: int
+    client: str = ""
+    owned: set[int] = dataclasses.field(default_factory=set)
+    connected_at: float = dataclasses.field(default_factory=time.time)
+    commands: int = 0
+
+
+@dataclasses.dataclass
+class _Entry:
+    """Lifecycle record for one engine-resident matrix.
+
+    ``array`` is the live device array, or None while spilled (then
+    ``host`` holds the row-major host copy and ``sharding`` remembers how
+    to device_put it back). ``refs`` is the handle refcount; the entry is
+    reclaimed when it reaches zero. ``last_use`` is the engine's logical
+    clock value at the most recent touch (LRU order)."""
+    array: Optional[jax.Array]
+    nbytes: int
+    session: int
+    refs: int = 1
+    last_use: int = 0
+    host: Optional[np.ndarray] = None
+    sharding: Any = None
+
+
+class SessionView:
+    """What a library routine sees as its "engine" (the ALI calling
+    convention, §3.1.3): handle operations scoped to the issuing session's
+    namespace, everything else delegated to the engine.
+
+    Routines keep the ``fn(engine, **args)`` signature; dispatching through
+    a view is how they "resolve handles through the session" — a handle
+    owned by another client raises KeyError, which ``run`` surfaces to that
+    client as an error Result.
+    """
+
+    def __init__(self, engine: "AlchemistEngine", session: Session):
+        self._engine = engine
+        self._session = session
+
+    @property
+    def session(self) -> Session:
+        return self._session
+
+    def put(self, array: jax.Array, name: Optional[str] = None
+            ) -> MatrixHandle:
+        return self._engine.put(array, name=name, session=self._session.id)
+
+    def get(self, handle: MatrixHandle) -> jax.Array:
+        return self._engine.get(handle, session=self._session.id)
+
+    def free(self, handle: MatrixHandle) -> None:
+        self._engine.free(handle, session=self._session.id)
+
+    def __getattr__(self, item):
+        return getattr(self._engine, item)
+
+
 class AlchemistEngine:
-    """Server side: handle table + library registry + routine dispatch."""
+    """Server side: session table + handle lifecycle + library registry +
+    serialized routine dispatch (§3.1.1).
+
+    ``memory_budget_bytes`` bounds device-resident matrix bytes; when a put
+    or reload would exceed it, least-recently-used entries spill to host
+    and transparently reload on next use. ``None`` disables eviction.
+    """
 
     def __init__(self, mesh: Optional[Mesh] = None,
-                 transfer_log: Optional[TransferLog] = None):
+                 transfer_log: Optional[TransferLog] = None,
+                 memory_budget_bytes: Optional[int] = None):
         self.mesh = mesh if mesh is not None else make_engine_mesh()
         self.num_workers = self.mesh.devices.size
-        self._store: dict[int, jax.Array] = {}
+        self.memory_budget_bytes = memory_budget_bytes
+        self._entries: dict[int, _Entry] = {}
         self._libraries: dict[str, dict[str, Any]] = {}
         self.transfer_log = transfer_log or TransferLog(
             engine_procs=self.num_workers)
+        # Session 0 is the always-present system namespace: in-process
+        # callers (engine-side services, the trainer) that bypass the
+        # protocol operate in it.
+        self._sessions: dict[int, Session] = {
+            SYSTEM_SESSION: Session(id=SYSTEM_SESSION, client="system")}
+        self._session_ids = itertools.count(1)
+        self._clock = itertools.count(1)
+        self._seq = itertools.count(1)
+        self._queue: collections.deque[tuple[int, bytes]] = collections.deque()
+        self._results: dict[int, bytes] = {}
+        self._dispatch_lock = threading.Lock()
+        self._state_lock = threading.RLock()
+
+    # ---- session lifecycle (the connect/disconnect handshake, §3.1.1) ----
+    def connect(self, client: str = "") -> Session:
+        """Mint a new client session with an empty handle namespace."""
+        with self._state_lock:
+            sess = Session(id=next(self._session_ids), client=client)
+            self._sessions[sess.id] = sess
+            return sess
+
+    def disconnect(self, session: int) -> None:
+        """Tear down a session: reclaim its handles, forget it."""
+        with self._state_lock:
+            self.free_session(session)
+            if session != SYSTEM_SESSION:
+                self._sessions.pop(session, None)
+
+    def free_session(self, session: int) -> int:
+        """Reclaim every matrix a session owns (regardless of refcount —
+        the client is gone). Returns the number of entries dropped."""
+        with self._state_lock:
+            sess = self._sessions.get(session)
+            if sess is None:
+                return 0
+            dropped = 0
+            for hid in list(sess.owned):
+                if self._entries.pop(hid, None) is not None:
+                    dropped += 1
+            sess.owned.clear()
+            return dropped
+
+    def sessions(self) -> list[Session]:
+        return [self._sessions[k] for k in sorted(self._sessions)]
+
+    def session(self, session_id: int) -> Session:
+        sess = self._sessions.get(session_id)
+        if sess is None:
+            raise UnknownSession(
+                f"session #{session_id} is not connected to this engine")
+        return sess
+
+    def handshake(self, wire: bytes) -> bytes:
+        """Protocol endpoint for connect/disconnect. Returns an encoded
+        Result: on connect, ``values`` carries the fresh session ID and the
+        worker count (the paper's driver handing back its resource grant)."""
+        try:
+            hs = protocol.decode_handshake(wire)
+            if hs.action == protocol.CONNECT:
+                sess = self.connect(hs.client)
+                return protocol.encode_result(protocol.Result(
+                    values={"session": sess.id, "workers": self.num_workers},
+                    session=sess.id))
+            if hs.action != protocol.DISCONNECT:
+                raise ValueError(f"unknown handshake action {hs.action!r}")
+            if hs.session == SYSTEM_SESSION:
+                raise ValueError("the system session cannot disconnect")
+            self.session(hs.session)            # raises if unknown
+            self.disconnect(hs.session)
+            return protocol.encode_result(protocol.Result(
+                values={"session": hs.session}, session=hs.session))
+        except Exception as e:
+            return protocol.encode_result(protocol.Result(
+                values={}, error=f"{type(e).__name__}: {e}"))
 
     # ---- library registry (the ALI layer, §3.1.3) ----
     def load_library(self, name: str, module) -> None:
         """``module`` must export ROUTINES: dict[str, callable]. Mirrors
-        dynamically dlopen()ing an ALI shared object."""
+        dynamically dlopen()ing an ALI shared object (§3.1.3)."""
         routines = getattr(module, "ROUTINES", None)
         if not isinstance(routines, dict):
             raise TypeError(f"library {name!r} exports no ROUTINES dict")
@@ -60,48 +234,204 @@ class AlchemistEngine:
     def libraries(self) -> list[str]:
         return sorted(self._libraries)
 
-    # ---- handle table ----
-    def put(self, array: jax.Array, name: Optional[str] = None) -> MatrixHandle:
-        handle = MatrixHandle.fresh(array.shape, array.dtype, name=name)
-        self._store[handle.id] = array
-        return handle
+    # ---- handle lifecycle (refcounts + LRU spill under a budget) ----
+    def put(self, array: jax.Array, name: Optional[str] = None,
+            session: int = SYSTEM_SESSION) -> MatrixHandle:
+        """Register a device array under a fresh handle owned by
+        ``session`` (refcount 1), evicting LRU entries if over budget."""
+        with self._state_lock:
+            sess = self.session(session)
+            handle = MatrixHandle.fresh(array.shape, array.dtype, name=name)
+            nbytes = int(np.prod(array.shape)) * array.dtype.itemsize
+            self._entries[handle.id] = _Entry(
+                array=array, nbytes=nbytes, session=session,
+                last_use=next(self._clock),
+                sharding=getattr(array, "sharding", None))
+            sess.owned.add(handle.id)
+            self._enforce_budget(keep=handle.id)
+            return handle
 
-    def get(self, handle: MatrixHandle) -> jax.Array:
-        return self._store[handle.id]
+    def get(self, handle: MatrixHandle, session: Optional[int] = None
+            ) -> jax.Array:
+        """Resolve a handle to its device array, transparently reloading a
+        spilled entry. ``session=None`` is the trusted in-process path
+        (global lookup); a session ID confines resolution to that
+        namespace plus the system one (protocol-level isolation)."""
+        with self._state_lock:
+            entry = self._visible_entry(handle, session)
+            entry.last_use = next(self._clock)
+            if entry.array is None:                     # spilled -> reload
+                entry.array = jax.device_put(
+                    entry.host, entry.sharding) if entry.sharding is not None \
+                    else jax.device_put(entry.host)
+                entry.host = None
+                self._enforce_budget(keep=handle.id)
+            return entry.array
 
-    def free(self, handle: MatrixHandle) -> None:
-        self._store.pop(handle.id, None)
+    def free(self, handle: MatrixHandle,
+             session: Optional[int] = None) -> None:
+        """Drop one reference; the entry is reclaimed at refcount zero.
+
+        A session may only free handles it *owns*: system-namespace
+        matrices are readable by every session (shared inputs) but
+        releasable only by the trusted in-process path (``session=None``)
+        — otherwise one protocol client could destroy another principal's
+        state."""
+        with self._state_lock:
+            if handle.id not in self._entries:
+                return                       # double-free is a no-op
+            entry = self._visible_entry(handle, session)
+            if session is not None and entry.session != session:
+                raise KeyError(
+                    f"handle #{handle.id} is owned by session "
+                    f"#{entry.session}; session #{session} may read "
+                    "but not free it")
+            entry.refs -= 1
+            if entry.refs <= 0:
+                self._entries.pop(handle.id, None)
+                owner = self._sessions.get(entry.session)
+                if owner is not None:
+                    owner.owned.discard(handle.id)
+
+    def retain(self, handle: MatrixHandle) -> None:
+        """Take an extra reference (e.g. a handle shared across calls)."""
+        with self._state_lock:
+            self._entry(handle).refs += 1
+
+    def refcount(self, handle: MatrixHandle) -> int:
+        with self._state_lock:
+            entry = self._entries.get(handle.id)
+            return 0 if entry is None else entry.refs
+
+    def is_spilled(self, handle: MatrixHandle) -> bool:
+        """True if the matrix currently lives on host (LRU-evicted)."""
+        with self._state_lock:
+            entry = self._entries.get(handle.id)
+            return entry is not None and entry.array is None
 
     def resident_bytes(self) -> int:
-        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
-                   for a in self._store.values())
+        """Bytes of matrix data currently on engine devices."""
+        with self._state_lock:
+            return sum(e.nbytes for e in self._entries.values()
+                       if e.array is not None)
+
+    def spilled_bytes(self) -> int:
+        """Bytes of matrix data currently spilled to host."""
+        with self._state_lock:
+            return sum(e.nbytes for e in self._entries.values()
+                       if e.array is None)
+
+    def _entry(self, handle: MatrixHandle) -> _Entry:
+        entry = self._entries.get(handle.id)
+        if entry is None:
+            raise KeyError(f"handle #{handle.id} is not resident "
+                           "on this engine (already freed?)")
+        return entry
+
+    def _visible_entry(self, handle: MatrixHandle,
+                       session: Optional[int]) -> _Entry:
+        entry = self._entry(handle)
+        if session is not None and entry.session not in (
+                session, SYSTEM_SESSION):
+            raise KeyError(
+                f"handle #{handle.id} is not visible in session "
+                f"#{session} (owned by session #{entry.session})")
+        return entry
+
+    def _enforce_budget(self, keep: Optional[int] = None) -> None:
+        """Spill LRU device-resident entries to host until under budget.
+        ``keep`` pins one entry (the one being put/reloaded right now)."""
+        if self.memory_budget_bytes is None:
+            return
+        resident = [(e.last_use, hid, e) for hid, e in self._entries.items()
+                    if e.array is not None and hid != keep]
+        resident.sort()
+        total = sum(e.nbytes for _, _, e in resident)
+        if keep is not None and keep in self._entries:
+            total += self._entries[keep].nbytes
+        for _, hid, entry in resident:
+            if total <= self.memory_budget_bytes:
+                break
+            entry.host = np.asarray(entry.array)
+            entry.array = None
+            total -= entry.nbytes
 
     # ---- 2D engine layout (Elemental DistMatrix analogue) ----
     def dist_sharding(self, shape) -> NamedSharding:
+        """Engine-native sharding for ``shape``: rows over the worker axis
+        when they divide evenly (the DistMatrix row-block layout),
+        replicated otherwise."""
         if len(shape) >= 1 and shape[0] % self.num_workers == 0:
             return NamedSharding(self.mesh, P("workers",
                                               *(None,) * (len(shape) - 1)))
         return NamedSharding(self.mesh, P(*(None,) * len(shape)))
 
-    # ---- dispatch (driver<->driver command channel) ----
+    # ---- dispatch (serialized command channel, §3.1.2) ----
     def run(self, wire_command: bytes) -> bytes:
-        """Execute one serialized Command; returns a serialized Result."""
+        """Execute one serialized Command; returns a serialized Result.
+
+        Commands from all sessions funnel through one FIFO queue drained
+        under the dispatch lock, so concurrent clients execute strictly
+        one-at-a-time in arrival order — the paper's single Alchemist
+        driver serializing requests from several Spark drivers. Sequence
+        assignment and enqueue are atomic so arrival order is exactly
+        execution order.
+        """
+        with self._state_lock:
+            seq = next(self._seq)
+            self._queue.append((seq, wire_command))
+        with self._dispatch_lock:
+            while seq not in self._results:
+                s, wire = self._queue.popleft()
+                self._results[s] = self._execute(wire)
+        return self._results.pop(seq)
+
+    def _execute(self, wire_command: bytes) -> bytes:
+        """Decode-dispatch-encode with a total exception barrier: whatever
+        goes wrong (undecodable wire bytes, a routine raising, a routine
+        returning values the protocol refuses to serialize), the drain
+        loop always gets an encoded error Result back — one client's bad
+        command must never desync the shared FIFO queue."""
+        try:
+            return self._dispatch(wire_command)
+        except Exception as e:
+            return protocol.encode_result(protocol.Result(
+                values={}, error=f"{type(e).__name__}: {e}"))
+
+    def _dispatch(self, wire_command: bytes) -> bytes:
         cmd = protocol.decode_command(wire_command)
+        if cmd.session == SYSTEM_SESSION:
+            # the system namespace is the trusted in-process principal;
+            # wire clients must connect() and use their own session
+            return protocol.encode_result(protocol.Result(
+                values={}, error="commands cannot execute in the system "
+                                 "session; connect() a session first",
+                session=cmd.session))
+        try:
+            sess = self.session(cmd.session)
+        except UnknownSession as e:
+            return protocol.encode_result(protocol.Result(
+                values={}, error=f"{type(e).__name__}: {e}",
+                session=cmd.session))
         lib = self._libraries.get(cmd.library)
         if lib is None:
             return protocol.encode_result(protocol.Result(
-                values={}, error=f"library {cmd.library!r} not registered"))
+                values={}, error=f"library {cmd.library!r} not registered",
+                session=cmd.session))
         fn = lib.get(cmd.routine)
         if fn is None:
             return protocol.encode_result(protocol.Result(
                 values={}, error=f"routine {cmd.routine!r} not in "
-                                 f"{cmd.library!r}"))
+                                 f"{cmd.library!r}", session=cmd.session))
+        sess.commands += 1
+        view = SessionView(self, sess)
         t0 = time.perf_counter()
         try:
-            values = fn(self, **cmd.args)
+            values = fn(view, **cmd.args)
         except Exception as e:  # surface engine-side failures to the client
             return protocol.encode_result(protocol.Result(
-                values={}, error=f"{type(e).__name__}: {e}"))
+                values={}, error=f"{type(e).__name__}: {e}",
+                session=cmd.session))
         elapsed = time.perf_counter() - t0
-        return protocol.encode_result(protocol.Result(values=values,
-                                                      elapsed=elapsed))
+        return protocol.encode_result(protocol.Result(
+            values=values, elapsed=elapsed, session=cmd.session))

@@ -6,6 +6,14 @@ expansion followed by CG) compose entirely engine-side: data is only shipped
 back to the client when it explicitly materializes the handle
 (``AlMatrix.to_row_matrix()`` / ``AlchemistContext.fetch``), mirroring
 ``toIndexedRowMatrix()`` in the paper (§3.3.2).
+
+The handle itself is an immutable value object: IDs are minted globally so
+a handle is unambiguous engine-wide, while *visibility* is a session
+property — the engine's session table says which namespace owns each ID,
+and protocol-level resolution is confined to the issuing session (see
+``engine.Session``). Lifecycle state (refcount, LRU position, spilled-to-
+host status) lives engine-side in the entry the ID names, never in the
+handle, so handles can be freely copied across the wire.
 """
 from __future__ import annotations
 

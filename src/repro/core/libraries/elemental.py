@@ -6,8 +6,12 @@ the Gram matrix, where each matvec v -> X^T (X v) is a distributed two-pass
 product over the row-sharded data (the paper's footnote 3: "both
 implementations use ARPACK to compute the eigenvalues of the Gram matrix").
 
-Every routine takes the engine as first argument and returns a dict of
-serializable values / MatrixHandles (the ALI calling convention).
+Every routine takes the dispatching session's engine view as first
+argument (``engine.SessionView``) and returns a dict of serializable
+values / MatrixHandles — the ALI calling convention (§3.1.3). Handle
+arguments resolve inside the *calling session's* namespace and output
+handles are minted into it, so concurrent clients sharing one engine
+(§3.1.1) cannot read or clobber each other's matrices.
 """
 from __future__ import annotations
 

@@ -8,6 +8,11 @@ per BSP round. We implement the identical math over RowMatrix partitions
 (measured) and model the per-round overhead with the Table-2 calibration
 (see core/costmodel.py) — both numbers are reported separately by the
 benchmarks so measurement and model never blur.
+
+Unlike the ALI modules (elemental/skylark) these functions never touch the
+engine or a session: they run entirely in the client's row-partitioned
+world, which is precisely the point of the comparison — no bridge, no
+sessions, no transfer, just per-round BSP overhead.
 """
 from __future__ import annotations
 

@@ -4,6 +4,10 @@ engine-side, as the paper does, so only the small raw feature matrix crosses
 the bridge) and the conjugate-gradient solver for the regularized system
 
     (Z^T Z + n*lambda*I) W = Z^T Y.
+
+Routines receive the dispatching session's engine view
+(``engine.SessionView``) as first argument: handle args resolve in the
+calling session's namespace, output handles are minted into it (§3.1.3).
 """
 from __future__ import annotations
 

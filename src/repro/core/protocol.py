@@ -1,11 +1,22 @@
 """Driver<->driver wire protocol (the paper's socket message layer, §3.1.2).
 
-Commands and results cross the client/engine boundary as msgpack-serialized
-messages; distributed matrices never do (they move through the transfer
-layer and are referenced by handle ID). Running every routine call through
-an explicit encode/decode keeps the bridge honest: only picklable scalars,
-strings and handle IDs can cross, exactly like the real system's serialized
-input parameters.
+Three message kinds cross the client/engine boundary, all msgpack-encoded:
+
+* ``Handshake`` — the connect/disconnect exchange that opens and closes a
+  client session (the paper's driver attaching to the Alchemist driver and
+  being assigned worker resources, §3.1.1). ``connect`` mints a session ID;
+  ``disconnect`` releases everything that session owns.
+* ``Command`` — one routine invocation, tagged with the issuing session so
+  the engine can resolve matrix handles inside that session's namespace.
+* ``Result`` — values, timing, the echoing session, and an ``error`` string
+  (empty on success) so engine-side failures propagate as data instead of
+  exceptions, exactly like an error status on the socket.
+
+Distributed matrices never cross here — they move through the transfer
+layer (``core/transfer.py``, §3.2) and are referenced by handle ID. Running
+every call through an explicit encode/decode keeps the bridge honest: only
+serializable scalars, strings and handle IDs can cross, exactly like the
+real system's serialized input parameters.
 """
 from __future__ import annotations
 
@@ -16,9 +27,31 @@ import msgpack
 
 _HANDLE_TAG = "__handle__"
 
+CONNECT = "connect"
+DISCONNECT = "disconnect"
+
+
+@dataclasses.dataclass(frozen=True)
+class Handshake:
+    """Session-management message (§3.1.1 driver attach/detach).
+
+    ``action`` is ``"connect"`` (client name travels in ``client``; the
+    engine replies with a fresh session ID) or ``"disconnect"`` (``session``
+    names the session to tear down).
+    """
+    action: str
+    client: str = ""
+    session: int = 0
+
 
 @dataclasses.dataclass(frozen=True)
 class Command:
+    """One serialized routine invocation (§3.1.2).
+
+    ``library``/``routine`` name the ALI entry point; ``args`` may contain
+    scalars, strings, and MatrixHandles; ``session`` scopes handle
+    resolution to the issuing client's namespace.
+    """
     library: str
     routine: str
     args: dict[str, Any]
@@ -27,9 +60,16 @@ class Command:
 
 @dataclasses.dataclass(frozen=True)
 class Result:
+    """Engine reply to a Command or Handshake (§3.1.2).
+
+    ``error`` is empty on success; on failure it carries the engine-side
+    exception rendered as ``"ExcType: message"``. ``session`` echoes the
+    session the reply belongs to.
+    """
     values: dict[str, Any]
     elapsed: float = 0.0
     error: str = ""
+    session: int = 0
 
 
 def _pack_value(v):
@@ -63,7 +103,26 @@ def _unpack_value(v):
     return v
 
 
+def encode_handshake(hs: Handshake) -> bytes:
+    """Serialize a connect/disconnect message."""
+    if hs.action not in (CONNECT, DISCONNECT):
+        raise ValueError(f"unknown handshake action {hs.action!r}")
+    return msgpack.packb({
+        "action": hs.action,
+        "client": hs.client,
+        "session": hs.session,
+    })
+
+
+def decode_handshake(data: bytes) -> Handshake:
+    """Inverse of :func:`encode_handshake`."""
+    d = msgpack.unpackb(data)
+    return Handshake(action=d["action"], client=d.get("client", ""),
+                     session=d.get("session", 0))
+
+
 def encode_command(cmd: Command) -> bytes:
+    """Serialize a Command; rejects values that must not cross the bridge."""
     return msgpack.packb({
         "library": cmd.library,
         "routine": cmd.routine,
@@ -73,20 +132,26 @@ def encode_command(cmd: Command) -> bytes:
 
 
 def decode_command(data: bytes) -> Command:
+    """Inverse of :func:`encode_command`."""
     d = msgpack.unpackb(data)
+    # session is mandatory on the wire: defaulting a missing field to the
+    # system namespace would silently grant it system-handle visibility.
     return Command(library=d["library"], routine=d["routine"],
                    args=_unpack_value(d["args"]), session=d["session"])
 
 
 def encode_result(res: Result) -> bytes:
+    """Serialize a Result (values + timing + error + session echo)."""
     return msgpack.packb({
         "values": _pack_value(res.values),
         "elapsed": res.elapsed,
         "error": res.error,
+        "session": res.session,
     })
 
 
 def decode_result(data: bytes) -> Result:
+    """Inverse of :func:`encode_result`."""
     d = msgpack.unpackb(data)
     return Result(values=_unpack_value(d["values"]), elapsed=d["elapsed"],
-                  error=d["error"])
+                  error=d["error"], session=d.get("session", 0))

@@ -1,46 +1,223 @@
-"""The transfer layer: client row-partitioned matrices <-> engine-resident
-distributed matrices (the paper's TCP-socket + re-layout path, §3.2).
+"""The streaming transfer layer: client row-partitioned matrices <->
+engine-resident distributed matrices (the paper's TCP-socket path, §3.2).
+
+The paper never ships a matrix in one message: each Spark executor opens a
+socket to each Alchemist worker and streams its rows in buffered sends,
+which the workers scatter into the Elemental DistMatrix layout. This module
+mirrors that: a matrix crosses the bridge as a sequence of row-block
+*chunks*. A RowMatrix source is consumed partition-by-partition (peak
+client memory is one partition plus one chunk, never the whole matrix),
+each chunk is ``device_put`` directly onto the engine device that owns its
+row range, and each chunk logs its own
+:class:`~repro.core.costmodel.TransferRecord`, so the cost model — and
+``benchmarks/table3_transfer.py``'s chunk-size sweep — sees the same
+per-message structure the real sockets have.
 
 On a TPU system both "sides" are device meshes, so the socket send becomes
-an explicit re-layout (device_put to the engine sharding); the cost model
-records what the same movement would cost over the paper's sockets and over
-ICI/DCN, feeding the EXPERIMENTS transfer tables.
+an explicit re-layout; the cost model records what the same movement would
+cost over the paper's sockets and over ICI/DCN, feeding the EXPERIMENTS
+transfer tables.
 """
 from __future__ import annotations
 
-from typing import Optional
+import bisect
+from typing import Any, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.costmodel import TransferRecord
-from repro.core.engine import AlchemistEngine
+from repro.core.costmodel import (
+    TransferRecord,
+    reshard_transfer_seconds,
+    stream_transfer_seconds,
+)
+from repro.core.engine import SYSTEM_SESSION, AlchemistEngine
 from repro.core.handles import MatrixHandle
 from repro.frontend.rowmatrix import RowMatrix
 
+# Default chunk size target, in bytes: roughly the socket-buffer ballpark
+# the Cray deployment report tunes around. Row counts are derived from it
+# per-matrix so a chunk is a whole number of rows.
+DEFAULT_CHUNK_BYTES = 4 << 20
 
-def to_engine(engine: AlchemistEngine, matrix, name: Optional[str] = None
+
+def chunk_rows_for(shape, itemsize: int,
+                   chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> int:
+    """Rows per chunk so a chunk is ~``chunk_bytes`` (at least one row)."""
+    row_bytes = max(1, int(np.prod(shape[1:])) * itemsize)
+    return max(1, chunk_bytes // row_bytes)
+
+
+def _row_plan(num_rows: int, chunk_rows: int,
+              boundaries: list[int]) -> list[tuple[int, int]]:
+    """Split ``[0, num_rows)`` into chunks of ``chunk_rows``, additionally
+    cut at every device shard boundary so no chunk straddles two shards."""
+    chunk_rows = max(1, int(chunk_rows))
+    cuts = {0, num_rows}
+    cuts.update(b for b in boundaries if 0 < b < num_rows)
+    cuts.update(range(0, num_rows, chunk_rows))
+    edges = sorted(cuts)
+    return list(zip(edges, edges[1:]))
+
+
+def _device_row_ranges(sharding, shape) -> list[tuple[int, int, Any]]:
+    """Read the row range each device owns straight off the sharding
+    (single source of truth — never re-derive the engine's layout rule).
+    Returns [(lo, hi, device)] sorted by lo."""
+    ranges = []
+    for dev, idx in sharding.devices_indices_map(tuple(shape)).items():
+        sl = idx[0] if idx else slice(None)
+        lo = 0 if sl.start is None else int(sl.start)
+        hi = shape[0] if sl.stop is None else int(sl.stop)
+        ranges.append((lo, hi, dev))
+    ranges.sort(key=lambda r: (r[0], r[1]))
+    return ranges
+
+
+def _aggregate_record(log, nbytes: int, direction: str, session: int,
+                      num_chunks: int, chunk_bytes: int) -> TransferRecord:
+    """Whole-stream summary record (returned to the caller, NOT logged —
+    the log carries the per-chunk records). ``chunk_index=-1`` marks it as
+    an aggregate; its socket model is the chunked stream model."""
+    return TransferRecord(
+        nbytes=int(nbytes),
+        direction=direction,
+        modeled_socket_s=stream_transfer_seconds(
+            nbytes, chunk_bytes, log.client_procs, log.engine_procs),
+        modeled_reshard_s=reshard_transfer_seconds(nbytes, log.chips),
+        session=session,
+        chunk_index=-1,
+        num_chunks=num_chunks,
+    )
+
+
+def to_engine(engine: AlchemistEngine, matrix, name: Optional[str] = None,
+              session: int = SYSTEM_SESSION,
+              chunk_rows: Optional[int] = None
               ) -> tuple[MatrixHandle, TransferRecord]:
-    """Ship a client matrix into the engine: row-layout -> engine 2D layout.
+    """Stream a client matrix into the engine in row-block chunks (§3.2).
 
-    Accepts a RowMatrix (the IndexedRowMatrix analogue) or a plain array.
-    Returns (handle, transfer record).
+    Accepts a RowMatrix (the IndexedRowMatrix analogue; consumed
+    partition-by-partition without collecting) or a plain array. The
+    matrix crosses as ``ceil(rows / chunk_rows)`` chunks (plus cuts at
+    shard boundaries); each is ``device_put`` onto the engine device
+    owning its row range and logged as its own TransferRecord tagged with
+    ``session`` and its chunk index. ``chunk_rows=None`` picks rows so a
+    chunk is ~``DEFAULT_CHUNK_BYTES``.
+
+    Returns ``(handle, aggregate record)`` — the record summarizes the
+    whole stream (total bytes, chunk count, stream-modeled socket cost);
+    the per-chunk records live in ``engine.transfer_log``.
+
+    A ``jax.Array`` input is already device-resident (an engine-side
+    service handing over data, not a socket crossing) and takes the
+    direct re-layout path: one ``device_put``, one record, no host
+    round trip.
     """
-    if isinstance(matrix, RowMatrix):
-        arr = matrix.collect()
+    if isinstance(matrix, jax.Array):
+        arr = jax.device_put(matrix, engine.dist_sharding(matrix.shape))
+        rec = engine.transfer_log.record(arr.nbytes, "to_engine",
+                                         session=session)
+        return engine.put(arr, name=name, session=session), rec
+
+    is_rm = isinstance(matrix, RowMatrix)
+    if is_rm:
+        shape = matrix.shape
+        itemsize = 8          # chunk-sizing heuristic only (np f64 rows)
+        src = None
     else:
-        arr = jnp.asarray(matrix)
-    arr = jax.device_put(arr, engine.dist_sharding(arr.shape))
-    rec = engine.transfer_log.record(
-        int(np.prod(arr.shape)) * arr.dtype.itemsize, "to_engine")
-    return engine.put(arr, name=name), rec
+        src = np.asarray(matrix)
+        shape = src.shape
+        itemsize = src.dtype.itemsize
+
+    if len(shape) < 1 or shape[0] == 0:
+        arr = jnp.asarray(matrix.collect() if is_rm else src)
+        arr = jax.device_put(arr, engine.dist_sharding(arr.shape))
+        rec = engine.transfer_log.record(arr.nbytes, "to_engine",
+                                         session=session)
+        return engine.put(arr, name=name, session=session), rec
+
+    if chunk_rows is None:
+        chunk_rows = chunk_rows_for(shape, itemsize)
+    chunk_rows = max(1, int(chunk_rows))
+    sharding = engine.dist_sharding(shape)
+
+    # Read placement off the sharding itself: which device owns which
+    # rows. Row-partitioned iff the per-device ranges tile [0, rows);
+    # otherwise (replicated) stage every chunk on the first device and
+    # let the final device_put broadcast.
+    ranges = _device_row_ranges(sharding, shape)
+    starts = [lo for lo, _, _ in ranges]
+    partitioned = (starts[0] == 0 and ranges[-1][1] == shape[0]
+                   and all(ranges[i][1] == ranges[i + 1][0]
+                           for i in range(len(ranges) - 1)))
+    boundaries = starts[1:] if partitioned else []
+    plan = _row_plan(shape[0], chunk_rows, boundaries)
+    num_chunks = len(plan)
+
+    chunks: Iterator[np.ndarray]
+    if is_rm:
+        chunks = matrix.iter_sized_row_blocks([hi - lo for lo, hi in plan])
+    else:
+        chunks = (src[lo:hi] for lo, hi in plan)
+
+    per_range: list[list[jax.Array]] = [[] for _ in ranges]
+    total = 0
+    for idx, ((lo, hi), chunk) in enumerate(zip(plan, chunks)):
+        chunk = np.ascontiguousarray(chunk)
+        total += chunk.nbytes
+        engine.transfer_log.record(
+            chunk.nbytes, "to_engine", session=session,
+            chunk_index=idx, num_chunks=num_chunks)
+        r = bisect.bisect_right(starts, lo) - 1 if partitioned else 0
+        per_range[r].append(jax.device_put(chunk, ranges[r][2]))
+
+    shards = [blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks)
+              for blocks in per_range if blocks]
+    if partitioned and len(ranges) > 1:
+        arr = jax.make_array_from_single_device_arrays(
+            tuple(shape), sharding, shards)
+    else:
+        arr = jax.device_put(shards[0], sharding)
+    rec = _aggregate_record(
+        engine.transfer_log, total, "to_engine", session, num_chunks,
+        max(1, total // num_chunks))
+    return engine.put(arr, name=name, session=session), rec
 
 
 def to_client(engine: AlchemistEngine, handle: MatrixHandle,
-              num_partitions: int = 8) -> tuple[RowMatrix, TransferRecord]:
-    """Materialize an engine matrix back on the client as a RowMatrix."""
-    arr = engine.get(handle)
-    rec = engine.transfer_log.record(
-        int(np.prod(arr.shape)) * arr.dtype.itemsize, "to_client")
-    return RowMatrix.from_array(np.asarray(arr), num_partitions), rec
+              num_partitions: int = 8, session: Optional[int] = None,
+              chunk_rows: Optional[int] = None
+              ) -> tuple[RowMatrix, TransferRecord]:
+    """Stream an engine matrix back to the client as a RowMatrix (§3.2,
+    reverse direction — the paper's ``toIndexedRowMatrix()``).
+
+    The fetch crosses in row-block chunks, one TransferRecord per chunk
+    plus an aggregate record returned to the caller; ``session`` applies
+    the same namespace check as routine dispatch.
+    """
+    arr = engine.get(handle, session=session)
+    sess = SYSTEM_SESSION if session is None else session
+    if arr.ndim < 1 or arr.shape[0] == 0:
+        rec = engine.transfer_log.record(arr.nbytes, "to_client",
+                                         session=sess)
+        return RowMatrix.from_array(np.asarray(arr), num_partitions), rec
+
+    if chunk_rows is None:
+        chunk_rows = chunk_rows_for(arr.shape, arr.dtype.itemsize)
+    chunk_rows = max(1, int(chunk_rows))
+    plan = _row_plan(arr.shape[0], chunk_rows, [])
+    out = np.empty(arr.shape, dtype=arr.dtype)
+    total = 0
+    for idx, (lo, hi) in enumerate(plan):
+        block = np.asarray(arr[lo:hi])
+        out[lo:hi] = block
+        total += block.nbytes
+        engine.transfer_log.record(
+            block.nbytes, "to_client", session=sess,
+            chunk_index=idx, num_chunks=len(plan))
+    rec = _aggregate_record(
+        engine.transfer_log, total, "to_client", sess, len(plan),
+        max(1, total // len(plan)))
+    return RowMatrix.from_array(out, num_partitions), rec

@@ -1,8 +1,14 @@
 """RowMatrix: the IndexedRowMatrix analogue — a dense matrix stored as
-row-block partitions of an RDD on the client side."""
+row-block partitions of an RDD on the client side.
+
+``iter_row_blocks`` exposes the matrix as a stream of fixed-size row
+blocks regardless of the underlying partitioning — the client-side half of
+the paper's §3.2 socket streaming, where each executor walks its partition
+and emits buffered sends of a tuned size rather than one message per
+partition."""
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Iterator, Optional
 
 import numpy as np
 
@@ -62,6 +68,45 @@ class RowMatrix:
 
     def collect(self) -> np.ndarray:
         return np.concatenate(self.rdd.collect(), axis=0)
+
+    def iter_row_blocks(self, block_rows: int) -> Iterator[np.ndarray]:
+        """Yield the matrix as contiguous ``block_rows``-row blocks (last
+        block may be short), re-chunking across partition boundaries.
+        This is the streaming source for chunked bridge transfers (§3.2):
+        partition layout on the client need not match the chunk size the
+        socket path was tuned for."""
+        block_rows = max(1, int(block_rows))
+        full, rem = divmod(self.num_rows, block_rows)
+        sizes = [block_rows] * full + ([rem] if rem else [])
+        return self.iter_sized_row_blocks(sizes)
+
+    def iter_sized_row_blocks(self, sizes: list[int]
+                              ) -> Iterator[np.ndarray]:
+        """Yield consecutive row blocks of exactly the given sizes (which
+        must sum to at most ``num_rows``), pulling partitions lazily —
+        peak client memory is one partition plus one block, never the
+        whole matrix. The transfer layer uses this with its chunk plan,
+        whose spans also cut at engine shard boundaries."""
+        pending: list[np.ndarray] = []
+        have = 0
+        si = 0
+        for i in range(self.rdd.num_partitions):
+            if si >= len(sizes):
+                return
+            part = np.atleast_2d(self.rdd.partition(i))
+            pending.append(part)
+            have += part.shape[0]
+            while si < len(sizes) and have >= sizes[si]:
+                buf = np.concatenate(pending, axis=0) if len(pending) > 1 \
+                    else pending[0]
+                yield buf[: sizes[si]]
+                rest = buf[sizes[si]:]
+                pending = [rest] if rest.shape[0] else []
+                have = rest.shape[0]
+                si += 1
+        if have and si < len(sizes):
+            yield np.concatenate(pending, axis=0) if len(pending) > 1 \
+                else pending[0]
 
     def gram_times(self, w: np.ndarray) -> np.ndarray:
         """(X^T X) w computed partition-by-partition — one BSP round of the

@@ -1,8 +1,16 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+Skipped cleanly when hypothesis is absent (it is declared in the
+``test`` extra of pyproject.toml; CI installs it)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; pip install -e '.[test]' to run these")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.common.config import ModelConfig
 from repro.core import AlchemistContext

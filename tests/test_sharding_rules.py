@@ -3,7 +3,11 @@ produced must divide the dims it shards, never reuse a mesh axis within a
 tensor, and respect claim-order priority."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; pip install -e '.[test]' to run these")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax
 from jax.sharding import Mesh
