@@ -1,0 +1,210 @@
+"""Multi-client throughput: the concurrency regime the scheduler exists for.
+
+The paper's Alchemist "can serve several Spark applications at a time"
+(§3.1.1) and the Cray deployment report (Rothauge et al., 2019) makes
+request overlap the deciding regime for bridge deployments. The failure
+mode of serialized dispatch is *head-of-line blocking*: one tenant's
+long-running Lanczos SVD makes every other tenant's milliseconds-cheap
+multiply wait behind it. This benchmark reproduces exactly that mix —
+
+* client 0 is the **heavy tenant**: repeated ``truncated_svd`` calls on a
+  large matrix (hundreds of ms each);
+* clients 1..N-1 are **light tenants**: multiply / gram / qr on small
+  matrices (single-digit ms each);
+
+— and time-boxes each configuration, counting completed calls, against
+
+* the **serialized baseline** — an engine with ``scheduler_workers=1``,
+  which reproduces PR 1's one-at-a-time FIFO dispatch exactly (same
+  ordering and hazard guarantees, zero overlap), and
+* the **async scheduler** — ``scheduler_workers=W`` so different
+  sessions' tasks overlap on the worker pool and light calls slip past
+  the in-flight SVD.
+
+Reported per client count: aggregate throughput (ops/s) for both engines,
+speedup, light-tenant p50/p99 latency under both, and the engine-side
+queue-wait vs execute split from the per-task accounting
+(``engine.task_log``) — head-of-line blocking is visible there as
+wait-time inflation with unchanged execute time.
+
+Run: ``PYTHONPATH=src:. python benchmarks/multiclient_throughput.py``
+(add ``--smoke`` for the CI-sized configuration).
+
+Each XLA execution is pinned to a single intra-op thread (set below,
+before jax initializes): one op = one core, like one Alchemist MPI rank
+per core in the paper — the *scheduler's* worker pool, not the linear
+algebra library's internal threading, is what exploits the host's cores.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import threading
+import time
+
+if "jax" not in sys.modules:          # too late to take effect otherwise
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_cpu_multi_thread_eigen=false"
+          " intra_op_parallelism_threads=1")
+
+import numpy as np
+
+from benchmarks.common import header, row
+from repro.core import AlchemistContext, AlchemistEngine
+from repro.core.costmodel import percentile
+from repro.core.engine import make_engine_mesh
+from repro.core.libraries import elemental
+
+HEAVY_SHAPE = (2048, 512)             # the paper's offloaded regime
+LIGHT_SHAPE = (128, 32)               # the 2ms interactive tenant
+
+
+def _heavy_loop(ac, al, k, deadline, latencies):
+    while time.perf_counter() < deadline:
+        t0 = time.perf_counter()
+        ac.call("elemental", "truncated_svd", A=al, k=k, oversample=8)
+        latencies.append(time.perf_counter() - t0)
+
+
+def _light_loop(ac, mats, deadline, latencies):
+    a, b = mats
+    i = 0
+    while time.perf_counter() < deadline:
+        t0 = time.perf_counter()
+        kind = i % 3
+        if kind == 0:
+            ac.call("elemental", "multiply", A=a, B=b)
+        elif kind == 1:
+            ac.call("elemental", "gram", A=a)
+        else:
+            ac.call("elemental", "qr", A=a)
+        latencies.append(time.perf_counter() - t0)
+        i += 1
+
+
+def _run_config(num_clients: int, duration_s: float, k: int,
+                workers: int) -> dict:
+    """1 heavy + (num_clients-1) light tenants against a fresh engine."""
+    engine = AlchemistEngine(make_engine_mesh(1),
+                            scheduler_workers=workers)
+    engine.load_library("elemental", elemental)
+    rng = np.random.RandomState(0)
+
+    heavy_ac = AlchemistContext(engine=engine, client_name="heavy")
+    heavy_al = heavy_ac.send_matrix(
+        rng.randn(*HEAVY_SHAPE).astype(np.float32))
+    light = []
+    for i in range(num_clients - 1):
+        ac = AlchemistContext(engine=engine, client_name=f"light-{i}")
+        a = ac.send_matrix(rng.randn(*LIGHT_SHAPE).astype(np.float32))
+        b = ac.send_matrix(rng.randn(
+            LIGHT_SHAPE[1], LIGHT_SHAPE[1]).astype(np.float32))
+        light.append((ac, (a, b)))
+
+    heavy_lat: list[float] = []
+    light_lats: list[list[float]] = [[] for _ in light]
+    deadline = time.perf_counter() + duration_s
+    threads = [threading.Thread(
+        target=_heavy_loop,
+        args=(heavy_ac, heavy_al, k, deadline, heavy_lat))]
+    threads += [threading.Thread(
+        target=_light_loop, args=(ac, mats, deadline, lat))
+        for (ac, mats), lat in zip(light, light_lats)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+
+    all_light = [x for sub in light_lats for x in sub]
+    ctxs = [heavy_ac] + [ac for ac, _ in light]
+    summaries = [engine.task_log.session_summary(ac.session)
+                 for ac in ctxs]
+    out = {
+        "wall_s": wall,
+        "ops": len(heavy_lat) + len(all_light),
+        "heavy_ops": len(heavy_lat),
+        "light_ops": len(all_light),
+        "throughput": (len(heavy_lat) + len(all_light)) / wall,
+        "light_p50_s": percentile(all_light, 50),
+        "light_p99_s": percentile(all_light, 99),
+        "wait_s": sum(s["wait_s"] for s in summaries),
+        "exec_s": sum(s["exec_s"] for s in summaries),
+        "max_running": engine.scheduler.max_running_observed,
+        "bridge_bytes": sum(
+            engine.transfer_log.session_summary(ac.session)
+            ["to_engine_bytes"] for ac in ctxs),
+    }
+    for ac in ctxs:
+        ac.stop()
+    engine.shutdown()
+    return out
+
+
+def run(clients_sweep, duration_s: float, k: int, workers: int,
+        reps: int = 3) -> None:
+    header("multi-client throughput: serialized FIFO vs async scheduler")
+    print(f"mix: 1 heavy tenant (truncated_svd k={k} on "
+          f"{HEAVY_SHAPE[0]}x{HEAVY_SHAPE[1]}) + N-1 light tenants "
+          f"(multiply/gram/qr on {LIGHT_SHAPE[0]}x{LIGHT_SHAPE[1]}); "
+          f"{duration_s:.0f}s time-box; pool = {workers} workers "
+          f"(host has {os.cpu_count()} cores); median of {reps} "
+          "interleaved serial/async reps")
+
+    # warm every jit cache so the sweep measures dispatch, not compiles
+    _run_config(2, min(duration_s, 2.0), k, workers)
+
+    print("clients,serial_ops_s,async_ops_s,speedup,"
+          "light_p50_ms_serial,light_p50_ms_async,"
+          "light_p99_ms_serial,light_p99_ms_async,"
+          "async_wait_s,async_exec_s,max_running")
+    for n in clients_sweep:
+        # alternate the two engines so slow host drift hits both equally
+        serials, concs = [], []
+        for _ in range(reps):
+            serials.append(_run_config(n, duration_s, k, workers=1))
+            concs.append(_run_config(n, duration_s, k, workers=workers))
+        s_tput = float(np.median([r["throughput"] for r in serials]))
+        c_tput = float(np.median([r["throughput"] for r in concs]))
+        serial = serials[int(np.argsort(
+            [r["throughput"] for r in serials])[len(serials) // 2])]
+        conc = concs[int(np.argsort(
+            [r["throughput"] for r in concs])[len(concs) // 2])]
+        print(f"{n},{s_tput:.1f},{c_tput:.1f},"
+              f"{c_tput / max(s_tput, 1e-9):.2f}x,"
+              f"{serial['light_p50_s'] * 1e3:.1f},"
+              f"{conc['light_p50_s'] * 1e3:.1f},"
+              f"{serial['light_p99_s'] * 1e3:.1f},"
+              f"{conc['light_p99_s'] * 1e3:.1f},"
+              f"{conc['wait_s']:.2f},{conc['exec_s']:.2f},"
+              f"{conc['max_running']}")
+        if n > 1:
+            row("multiclient/overlap_observed", conc["max_running"],
+                f"clients={n} (must exceed 1 for real concurrency)")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized: short time-box, clients 1-4")
+    p.add_argument("--clients", default="1,2,4,8,16",
+                   help="comma-separated client counts to sweep")
+    p.add_argument("--duration", type=float, default=4.0,
+                   help="seconds per timed configuration")
+    p.add_argument("--k", type=int, default=8, help="truncated_svd rank")
+    p.add_argument("--workers", type=int,
+                   default=max(2, min(8, os.cpu_count() or 2)))
+    args = p.parse_args()
+    if args.smoke:
+        run([1, 2, 4], duration_s=2.0, k=8, workers=2, reps=3)
+    else:
+        clients = [int(c) for c in args.clients.split(",")]
+        run(clients, duration_s=args.duration, k=args.k,
+            workers=args.workers)
+
+
+if __name__ == "__main__":
+    main()

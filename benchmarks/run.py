@@ -9,6 +9,7 @@ import sys
 from benchmarks import (
     fig3_weak_scaling,
     kernel_bench,
+    multiclient_throughput,
     roofline_table,
     table2_cg,
     table3_transfer,
@@ -24,6 +25,9 @@ ALL = {
     "fig3": fig3_weak_scaling.run,
     "kernels": kernel_bench.run,
     "roofline": roofline_table.run,
+    # smoke-sized here; the standalone script exposes the full sweep
+    "multiclient": lambda: multiclient_throughput.run(
+        [1, 2, 4], duration_s=2.0, k=8, workers=2),
 }
 
 

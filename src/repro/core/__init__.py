@@ -1,7 +1,9 @@
 # The paper's primary contribution: the Alchemist offload system —
-# client context + matrix handles + library registry + engine + transfer.
-from repro.core.context import AlchemistContext, AlMatrix
+# client context + matrix handles + library registry + engine + transfer,
+# with async futures over the engine's hazard-aware task scheduler.
+from repro.core.context import AlchemistContext, AlFuture, AlMatrix
 from repro.core.engine import AlchemistEngine
 from repro.core.handles import MatrixHandle
 
-__all__ = ["AlchemistContext", "AlMatrix", "AlchemistEngine", "MatrixHandle"]
+__all__ = ["AlchemistContext", "AlFuture", "AlMatrix", "AlchemistEngine",
+           "MatrixHandle"]

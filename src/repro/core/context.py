@@ -19,15 +19,26 @@ attach to one engine concurrently — the paper's multiple Spark
 applications sharing one Alchemist instance — without clobbering each
 other's handles. ``stop()`` sends the disconnect, and the engine reclaims
 everything this session still owns.
+
+Beyond the blocking ``call``, the context exposes the async path over the
+engine's task scheduler: ``call_async`` submits and returns an
+:class:`AlFuture` immediately. A future's *deferred output handles*
+(``fut["Q"]``) can be passed as arguments to further ``call_async``
+invocations before the producer has run — the chain pipelines entirely
+engine-side with zero client round trips (§3.3.2's resident-matrix
+chaining, now overlapped), while the engine's hazard tracking keeps the
+execution order correct.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+import types
+from typing import Any, Optional, Union
 
 import numpy as np
 
 from repro.core import protocol, transfer
-from repro.core.engine import AlchemistEngine, make_engine_mesh
+from repro.core.engine import ENGINE_LIBRARY, AlchemistEngine, \
+    make_engine_mesh
 from repro.core.handles import MatrixHandle
 from repro.frontend.rowmatrix import RowMatrix
 
@@ -64,10 +75,20 @@ class AlchemistContext:
 
     # ---- library registration ----
     def register_library(self, name: str, module) -> None:
-        """Ask the engine to load an ALI library module (§3.1.3).
-        Libraries are engine-global: every attached session can call them."""
+        """Ask the engine to load an ALI library module (§3.1.3), through
+        the wire protocol like every other client action: the module
+        crosses as its import path and the engine imports it server-side,
+        as a scheduler *barrier* task — so loading serializes correctly
+        with every in-flight task from every session. Libraries are
+        engine-global: every attached session can call them."""
         self._check_alive()
-        self.engine.load_library(name, module)
+        if not isinstance(module, types.ModuleType):
+            raise TypeError(
+                "register_library sends the module's import path across "
+                f"the wire; got {type(module).__name__} — use "
+                "engine.load_library for in-process objects")
+        self.call(ENGINE_LIBRARY, "load_library", name=name,
+                  module=module.__name__)
 
     # ---- data movement (the streaming transfer layer, §3.2) ----
     def send_matrix(self, matrix, name: Optional[str] = None,
@@ -93,24 +114,44 @@ class AlchemistContext:
             else self.chunk_rows)
         return rm
 
-    # ---- routine invocation (serialized command channel, §3.1.2) ----
+    # ---- routine invocation (async task scheduler, §3.1.2) ----
     def call(self, library: str, routine: str, **kwargs) -> dict[str, Any]:
-        """Invoke one ALI routine through the wire protocol. Handle args
-        resolve inside this session's namespace on the engine side; the
-        result dict carries routine outputs plus ``_elapsed`` seconds."""
+        """Invoke one ALI routine through the wire protocol, blocking
+        until it completes (submit + wait on the engine's scheduler).
+        Handle args resolve inside this session's namespace on the engine
+        side; the result dict carries routine outputs plus ``_elapsed``
+        (execute) / ``_wait_s`` (queued) seconds."""
+        return self.call_async(library, routine, **kwargs).result()
+
+    def call_async(self, library: str, routine: str,
+                   **kwargs) -> "AlFuture":
+        """Submit one ALI routine to the engine's task scheduler and
+        return immediately with an :class:`AlFuture`.
+
+        Args may be scalars, MatrixHandles, AlMatrix proxies, or the
+        deferred outputs of earlier futures (``earlier["Q"]``): deferred
+        args become dependency edges engine-side, so a whole chain can be
+        submitted in one burst and pipelines without further round trips.
+        """
         self._check_alive()
-        args = {
-            k: (v.handle if isinstance(v, AlMatrix) else v)
-            for k, v in kwargs.items()
-        }
+        args = {k: self._as_arg(v) for k, v in kwargs.items()}
         wire = protocol.encode_command(protocol.Command(
-            library=library, routine=routine, args=args, session=self.session))
-        result = protocol.decode_result(self.engine.run(wire))
-        if result.error:
-            raise AlchemistError(result.error)
-        out = dict(result.values)
-        out["_elapsed"] = result.elapsed
-        return out
+            library=library, routine=routine, args=args,
+            session=self.session))
+        sub = protocol.decode_result(self.engine.submit(wire))
+        if sub.error:
+            raise AlchemistError(sub.error)
+        return AlFuture(self, sub.task, label=f"{library}.{routine}")
+
+    @staticmethod
+    def _as_arg(v):
+        if isinstance(v, AlMatrix):
+            return v.handle
+        if isinstance(v, AlFuture):
+            raise TypeError(
+                "pass a future's named output (fut['Q']), not the future "
+                "itself — routines produce several handles")
+        return v
 
     def wrap(self, handle: MatrixHandle) -> "AlMatrix":
         """Wrap an engine handle (e.g. a routine output) as an AlMatrix."""
@@ -133,6 +174,90 @@ class AlchemistContext:
     def _check_alive(self):
         if self._stopped:
             raise AlchemistError("AlchemistContext is stopped")
+
+    def _task_op(self, action: str, task: int) -> protocol.Result:
+        res = protocol.decode_result(self.engine.task_op(
+            protocol.encode_task_op(protocol.TaskOp(
+                action=action, task=task, session=self.session))))
+        return res
+
+
+class AlFuture:
+    """Client-side handle on one submitted task (the async half of the
+    ACI). ``result()`` blocks on the engine's ``wait`` endpoint;
+    ``done()``/``state()`` poll without blocking; ``fut[key]`` names one
+    of the routine's output handles — a real MatrixHandle once the task
+    finished, a :class:`protocol.DeferredHandle` placeholder before that,
+    which later ``call_async`` invocations accept as arguments (the
+    engine chains them with dependency edges, §3.3.2 pipelined)."""
+
+    def __init__(self, ac: AlchemistContext, task: int, label: str = ""):
+        self.ac = ac
+        self.task = task
+        self.label = label
+        self._result: Optional[protocol.Result] = None
+
+    def __getitem__(self, key: str
+                    ) -> Union[MatrixHandle, protocol.DeferredHandle]:
+        if self._result is None and not self.ac._stopped:
+            # resolve lazily: once the producer is terminal its outputs
+            # are real handles (one cheap poll; still zero round trips
+            # while the task is in flight)
+            poll = self.ac._task_op(protocol.POLL, self.task)
+            if poll.state in ("DONE", "FAILED"):
+                self._result = self.ac._task_op(protocol.WAIT, self.task)
+        if self._result is not None:
+            if self._result.error:
+                # chaining on a producer known to have failed is a
+                # client-side error — a deferred placeholder would only
+                # fail later with a worse message
+                raise AlchemistError(
+                    f"cannot take output {key!r} of failed "
+                    f"{self.label or 'task'} #{self.task}: "
+                    f"{self._result.error}")
+            v = self._result.values.get(key)
+            if not isinstance(v, MatrixHandle):
+                raise KeyError(
+                    f"{self.label or 'task'} #{self.task} produced no "
+                    f"handle named {key!r}")
+            return v
+        return protocol.DeferredHandle(task=self.task, key=key)
+
+    def state(self) -> str:
+        """Current scheduler state: QUEUED/RUNNING/DONE/FAILED. Raises
+        :class:`AlchemistError` if the engine no longer knows the task
+        (e.g. polled after ``ac.stop()``) — never loops as not-done."""
+        if self._result is not None:
+            return self._result.state
+        res = self.ac._task_op(protocol.POLL, self.task)
+        if res.error:
+            raise AlchemistError(res.error)
+        return res.state
+
+    def done(self) -> bool:
+        return self.state() in ("DONE", "FAILED")
+
+    def result(self) -> dict[str, Any]:
+        """Block until the task completes; return its outputs plus
+        ``_elapsed`` (execute seconds, legacy key), ``_wait_s`` (queued
+        behind dependencies/workers) and ``_exec_s``. Raises
+        :class:`AlchemistError` if the routine failed.
+
+        Fetch before ``ac.stop()``: disconnect drops the session's
+        retained task results engine-side, so an unfetched future raises
+        after stop, while one fetched earlier keeps serving its client-
+        side cache."""
+        if self._result is None:
+            self.ac._check_alive()
+            self._result = self.ac._task_op(protocol.WAIT, self.task)
+        res = self._result
+        if res.error:
+            raise AlchemistError(res.error)
+        out = dict(res.values)
+        out["_elapsed"] = res.elapsed
+        out["_wait_s"] = res.wait_s
+        out["_exec_s"] = res.exec_s
+        return out
 
 
 class AlMatrix:

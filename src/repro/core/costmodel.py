@@ -18,6 +18,7 @@ calibration error is always visible.
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 GB = 1e9
 
@@ -118,7 +119,12 @@ class TransferRecord:
 
 
 class TransferLog:
-    """Accumulates every boundary crossing for the EXPERIMENTS tables."""
+    """Accumulates every boundary crossing for the EXPERIMENTS tables.
+
+    Appends are lock-protected: with the async scheduler, transfers from
+    several client threads interleave with engine-side task execution, and
+    the log is the shared accounting surface they all write.
+    """
 
     def __init__(self, client_procs: int = 20, engine_procs: int = 20,
                  chips: int = 256):
@@ -126,6 +132,7 @@ class TransferLog:
         self.engine_procs = engine_procs
         self.chips = chips
         self.records: list[TransferRecord] = []
+        self._lock = threading.Lock()
 
     def record(self, nbytes: int, direction: str, session: int = 0,
                chunk_index: int = 0, num_chunks: int = 1) -> TransferRecord:
@@ -141,7 +148,8 @@ class TransferLog:
             chunk_index=chunk_index,
             num_chunks=num_chunks,
         )
-        self.records.append(rec)
+        with self._lock:
+            self.records.append(rec)
         return rec
 
     @property
@@ -155,3 +163,86 @@ class TransferLog:
     def session_bytes(self, session: int) -> int:
         """Total bytes a given client session moved across the bridge."""
         return sum(r.nbytes for r in self.records if r.session == session)
+
+    def session_summary(self, session: int) -> dict:
+        """Per-session transfer accounting: bytes and chunk counts by
+        direction plus total modeled socket seconds — what the
+        multi-client benchmark charges each tenant for bridge traffic."""
+        with self._lock:
+            recs = [r for r in self.records if r.session == session]
+        out = {"session": session,
+               "modeled_socket_s": sum(r.modeled_socket_s for r in recs)}
+        for direction in ("to_engine", "to_client"):
+            sub = [r for r in recs if r.direction == direction]
+            out[f"{direction}_bytes"] = sum(r.nbytes for r in sub)
+            out[f"{direction}_chunks"] = len(sub)
+        return out
+
+
+def percentile(values, q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) without numpy — the latency
+    quantile the benchmark tables report. Returns 0.0 on empty input."""
+    if not values:
+        return 0.0
+    vals = sorted(values)
+    rank = max(0, min(len(vals) - 1,
+                      int(round(q / 100.0 * (len(vals) - 1)))))
+    return float(vals[rank])
+
+
+@dataclasses.dataclass
+class TaskRecord:
+    """Accounting for one scheduled command: which session ran what, how
+    long it waited in the queue (dependencies + worker availability) vs
+    how long it executed, and its terminal state."""
+    session: int
+    label: str                    # "library.routine"
+    state: str                    # DONE | FAILED
+    wait_s: float
+    exec_s: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.wait_s + self.exec_s
+
+
+class TaskLog:
+    """Per-task wait/execute accounting for the scheduler (the queueing
+    side of the paper's overhead story: §4 separates transfer from
+    compute; under concurrency a third term appears — time spent queued
+    behind other tenants — and this log is where it becomes visible)."""
+
+    def __init__(self):
+        self.records: list[TaskRecord] = []
+        self._lock = threading.Lock()
+
+    def record(self, session: int, label: str, state: str,
+               wait_s: float, exec_s: float) -> TaskRecord:
+        rec = TaskRecord(session=session, label=label, state=state,
+                         wait_s=wait_s, exec_s=exec_s)
+        with self._lock:
+            self.records.append(rec)
+        return rec
+
+    def session_summary(self, session: int) -> dict:
+        """Latency summary for one session: task counts, total/mean
+        wait and execute seconds, and p50/p99 end-to-end latency."""
+        with self._lock:
+            recs = [r for r in self.records if r.session == session]
+        lat = [r.latency_s for r in recs]
+        n = len(recs)
+        return {
+            "session": session,
+            "tasks": n,
+            "failed": sum(1 for r in recs if r.state == "FAILED"),
+            "wait_s": sum(r.wait_s for r in recs),
+            "exec_s": sum(r.exec_s for r in recs),
+            "mean_wait_s": sum(r.wait_s for r in recs) / n if n else 0.0,
+            "mean_exec_s": sum(r.exec_s for r in recs) / n if n else 0.0,
+            "p50_latency_s": percentile(lat, 50),
+            "p99_latency_s": percentile(lat, 99),
+        }
+
+    def sessions(self) -> list[int]:
+        with self._lock:
+            return sorted({r.session for r in self.records})

@@ -9,9 +9,13 @@ The engine owns
 * a *session table* — the paper's multiple Spark drivers attached to one
   Alchemist instance concurrently (§3.1.1: "Alchemist can serve several
   Spark applications at a time"). Each ``connect`` handshake mints a
-  ``Session`` with its own handle namespace; commands from different
-  clients are serialized through a FIFO dispatch queue so they never
-  interleave mid-routine or clobber each other's handle tables;
+  ``Session`` with its own handle namespace;
+* a *task scheduler* (``core/scheduler.py``) — commands become QUEUED/
+  RUNNING/DONE/FAILED tasks on a worker pool: different sessions' routines
+  run concurrently, while per-session program order, per-handle read/write
+  hazards, and deferred-output data dependencies are enforced as
+  dependency edges. ``run`` (submit+wait) keeps the blocking call
+  semantics; ``submit``/``task_op`` expose the async path;
 * a *handle lifecycle layer* — refcounted entries under an optional engine
   memory budget, with LRU spill-to-host eviction and transparent reload on
   next use (the engine-side answer to the paper's observation that matrices
@@ -26,8 +30,8 @@ launched on "a user-specified number of nodes" (§3.1.1).
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
+import importlib
 import itertools
 import threading
 import time
@@ -37,11 +41,15 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import protocol
-from repro.core.costmodel import TransferLog
+from repro.core import protocol, scheduler as scheduling
+from repro.core.costmodel import TaskLog, TransferLog
 from repro.core.handles import MatrixHandle
 
 SYSTEM_SESSION = 0
+
+# Reserved library name for engine-internal routines reachable over the
+# wire (library loading); real ALI libraries cannot shadow it.
+ENGINE_LIBRARY = "_engine"
 
 
 def make_engine_mesh(num_workers: Optional[int] = None) -> Mesh:
@@ -121,6 +129,9 @@ class SessionView:
     def get(self, handle: MatrixHandle) -> jax.Array:
         return self._engine.get(handle, session=self._session.id)
 
+    def overwrite(self, handle: MatrixHandle, array: jax.Array) -> None:
+        self._engine.overwrite(handle, array, session=self._session.id)
+
     def free(self, handle: MatrixHandle) -> None:
         self._engine.free(handle, session=self._session.id)
 
@@ -130,16 +141,20 @@ class SessionView:
 
 class AlchemistEngine:
     """Server side: session table + handle lifecycle + library registry +
-    serialized routine dispatch (§3.1.1).
+    hazard-aware concurrent routine dispatch (§3.1.1).
 
     ``memory_budget_bytes`` bounds device-resident matrix bytes; when a put
     or reload would exceed it, least-recently-used entries spill to host
     and transparently reload on next use. ``None`` disables eviction.
+    ``scheduler_workers`` sizes the dispatch worker pool: different
+    sessions' commands run concurrently up to this width (1 reproduces the
+    old strictly-serialized dispatch).
     """
 
     def __init__(self, mesh: Optional[Mesh] = None,
                  transfer_log: Optional[TransferLog] = None,
-                 memory_budget_bytes: Optional[int] = None):
+                 memory_budget_bytes: Optional[int] = None,
+                 scheduler_workers: int = 4):
         self.mesh = mesh if mesh is not None else make_engine_mesh()
         self.num_workers = self.mesh.devices.size
         self.memory_budget_bytes = memory_budget_bytes
@@ -147,6 +162,7 @@ class AlchemistEngine:
         self._libraries: dict[str, dict[str, Any]] = {}
         self.transfer_log = transfer_log or TransferLog(
             engine_procs=self.num_workers)
+        self.task_log = TaskLog()
         # Session 0 is the always-present system namespace: in-process
         # callers (engine-side services, the trainer) that bypass the
         # protocol operate in it.
@@ -154,11 +170,9 @@ class AlchemistEngine:
             SYSTEM_SESSION: Session(id=SYSTEM_SESSION, client="system")}
         self._session_ids = itertools.count(1)
         self._clock = itertools.count(1)
-        self._seq = itertools.count(1)
-        self._queue: collections.deque[tuple[int, bytes]] = collections.deque()
-        self._results: dict[int, bytes] = {}
-        self._dispatch_lock = threading.Lock()
         self._state_lock = threading.RLock()
+        self.scheduler = scheduling.TaskScheduler(
+            num_workers=scheduler_workers, on_finish=self._record_task)
 
     # ---- session lifecycle (the connect/disconnect handshake, §3.1.1) ----
     def connect(self, client: str = "") -> Session:
@@ -169,11 +183,16 @@ class AlchemistEngine:
             return sess
 
     def disconnect(self, session: int) -> None:
-        """Tear down a session: reclaim its handles, forget it."""
+        """Tear down a session: drain its in-flight tasks (teardown must
+        not race a routine still resolving this namespace), reclaim its
+        handles and retained task results, forget it. Unfetched futures
+        of a stopped context are therefore gone — fetch before stop."""
+        self.scheduler.wait_session(session)
         with self._state_lock:
             self.free_session(session)
             if session != SYSTEM_SESSION:
                 self._sessions.pop(session, None)
+        self.scheduler.forget_session(session)
 
     def free_session(self, session: int) -> int:
         """Reclaim every matrix a session owns (regardless of refcount —
@@ -198,6 +217,22 @@ class AlchemistEngine:
             raise UnknownSession(
                 f"session #{session_id} is not connected to this engine")
         return sess
+
+    def shutdown(self) -> None:
+        """Tear the engine down: stop the scheduler's worker threads
+        (in-flight tasks finish, queued ones fail) and drop every
+        resident matrix. After this the engine accepts no more commands;
+        construct a new one to continue. Idempotent."""
+        self.scheduler.shutdown()
+        with self._state_lock:
+            for sid in list(self._sessions):
+                sess = self._sessions[sid]
+                for hid in list(sess.owned):
+                    self._entries.pop(hid, None)
+                sess.owned.clear()
+                if sid != SYSTEM_SESSION:
+                    del self._sessions[sid]
+            self._entries.clear()
 
     def handshake(self, wire: bytes) -> bytes:
         """Protocol endpoint for connect/disconnect. Returns an encoded
@@ -225,7 +260,14 @@ class AlchemistEngine:
     # ---- library registry (the ALI layer, §3.1.3) ----
     def load_library(self, name: str, module) -> None:
         """``module`` must export ROUTINES: dict[str, callable]. Mirrors
-        dynamically dlopen()ing an ALI shared object (§3.1.3)."""
+        dynamically dlopen()ing an ALI shared object (§3.1.3). This is the
+        trusted in-process path; wire clients go through the
+        ``_engine.load_library`` builtin (a scheduler barrier, so loading
+        serializes with every in-flight task)."""
+        if name == ENGINE_LIBRARY:
+            raise ValueError(
+                f"library name {ENGINE_LIBRARY!r} is reserved for engine "
+                "builtins")
         routines = getattr(module, "ROUTINES", None)
         if not isinstance(routines, dict):
             raise TypeError(f"library {name!r} exports no ROUTINES dict")
@@ -267,6 +309,33 @@ class AlchemistEngine:
                 entry.host = None
                 self._enforce_budget(keep=handle.id)
             return entry.array
+
+    def overwrite(self, handle: MatrixHandle, array: jax.Array,
+                  session: Optional[int] = None) -> None:
+        """Replace the matrix a handle names, in place (same ID, same
+        owner, refcount untouched) — the engine-side *write* path that
+        read/write hazard tracking orders against. Only the owning
+        session (or the trusted in-process path) may write a handle; the
+        new array must keep the handle's shape/dtype so every outstanding
+        copy of the handle stays truthful."""
+        with self._state_lock:
+            entry = self._visible_entry(handle, session)
+            if session is not None and entry.session != session:
+                raise KeyError(
+                    f"handle #{handle.id} is owned by session "
+                    f"#{entry.session}; session #{session} may read "
+                    "but not overwrite it")
+            if tuple(array.shape) != tuple(handle.shape) or \
+                    str(array.dtype) != str(handle.dtype):
+                raise ValueError(
+                    f"overwrite of handle #{handle.id} must keep shape "
+                    f"{handle.shape} and dtype {handle.dtype}, got "
+                    f"{tuple(array.shape)}/{array.dtype}")
+            entry.array = array
+            entry.host = None
+            entry.sharding = getattr(array, "sharding", entry.sharding)
+            entry.last_use = next(self._clock)
+            self._enforce_budget(keep=handle.id)
 
     def free(self, handle: MatrixHandle,
              session: Optional[int] = None) -> None:
@@ -366,40 +435,35 @@ class AlchemistEngine:
                                               *(None,) * (len(shape) - 1)))
         return NamedSharding(self.mesh, P(*(None,) * len(shape)))
 
-    # ---- dispatch (serialized command channel, §3.1.2) ----
+    # ---- dispatch (async task scheduler over the command channel) ----
     def run(self, wire_command: bytes) -> bytes:
         """Execute one serialized Command; returns a serialized Result.
 
-        Commands from all sessions funnel through one FIFO queue drained
-        under the dispatch lock, so concurrent clients execute strictly
-        one-at-a-time in arrival order — the paper's single Alchemist
-        driver serializing requests from several Spark drivers. Sequence
-        assignment and enqueue are atomic so arrival order is exactly
-        execution order.
+        Blocking semantics, now built as submit + wait on the task
+        scheduler: the command becomes a task, ordered after this
+        session's earlier tasks and any handle hazards, and the call
+        blocks until it reaches a terminal state. Concurrent clients'
+        independent commands overlap on the worker pool instead of
+        head-of-line blocking each other.
         """
-        with self._state_lock:
-            seq = next(self._seq)
-            self._queue.append((seq, wire_command))
-        with self._dispatch_lock:
-            while seq not in self._results:
-                s, wire = self._queue.popleft()
-                self._results[s] = self._execute(wire)
-        return self._results.pop(seq)
+        sub = protocol.decode_result(self.submit(wire_command))
+        if sub.error:
+            return protocol.encode_result(sub)
+        return self.wait_task(sub.task, session=sub.session)
 
-    def _execute(self, wire_command: bytes) -> bytes:
-        """Decode-dispatch-encode with a total exception barrier: whatever
-        goes wrong (undecodable wire bytes, a routine raising, a routine
-        returning values the protocol refuses to serialize), the drain
-        loop always gets an encoded error Result back — one client's bad
-        command must never desync the shared FIFO queue."""
+    def submit(self, wire_command: bytes) -> bytes:
+        """Enqueue one serialized Command as an asynchronous task; returns
+        immediately with a Result whose ``task``/``state`` name the new
+        table entry. Submission fails fast (no task minted) on
+        undecodable bytes, the system session, or an unknown session;
+        library/routine existence is checked at *execution* time so a
+        submitted ``_engine.load_library`` can satisfy later submissions.
+        """
         try:
-            return self._dispatch(wire_command)
+            cmd = protocol.decode_command(wire_command)
         except Exception as e:
             return protocol.encode_result(protocol.Result(
                 values={}, error=f"{type(e).__name__}: {e}"))
-
-    def _dispatch(self, wire_command: bytes) -> bytes:
-        cmd = protocol.decode_command(wire_command)
         if cmd.session == SYSTEM_SESSION:
             # the system namespace is the trusted in-process principal;
             # wire clients must connect() and use their own session
@@ -408,30 +472,201 @@ class AlchemistEngine:
                                  "session; connect() a session first",
                 session=cmd.session))
         try:
-            sess = self.session(cmd.session)
+            self.session(cmd.session)
         except UnknownSession as e:
             return protocol.encode_result(protocol.Result(
                 values={}, error=f"{type(e).__name__}: {e}",
                 session=cmd.session))
-        lib = self._libraries.get(cmd.library)
-        if lib is None:
-            return protocol.encode_result(protocol.Result(
-                values={}, error=f"library {cmd.library!r} not registered",
-                session=cmd.session))
-        fn = lib.get(cmd.routine)
-        if fn is None:
-            return protocol.encode_result(protocol.Result(
-                values={}, error=f"routine {cmd.routine!r} not in "
-                                 f"{cmd.library!r}", session=cmd.session))
-        sess.commands += 1
-        view = SessionView(self, sess)
-        t0 = time.perf_counter()
+        reads, writes, data_deps = self._hazards(cmd)
+        # deferred handles are session-scoped like everything else: a
+        # client may only chain on its *own* tasks (same isolation rule
+        # task_op enforces for poll/wait)
+        for dep in sorted(data_deps):
+            try:
+                producer = self.scheduler.task(dep)
+            except KeyError as e:
+                return protocol.encode_result(protocol.Result(
+                    values={}, error=f"KeyError: {e}",
+                    session=cmd.session))
+            if producer.session != cmd.session:
+                return protocol.encode_result(protocol.Result(
+                    values={}, error=f"KeyError: task #{dep} does not "
+                    f"belong to session #{cmd.session}",
+                    session=cmd.session))
+        barrier = cmd.library == ENGINE_LIBRARY
         try:
-            values = fn(view, **cmd.args)
-        except Exception as e:  # surface engine-side failures to the client
+            task = self.scheduler.submit(
+                lambda _t, c=cmd: self._run_task(c), session=cmd.session,
+                reads=reads, writes=writes, data_deps=data_deps,
+                barrier=barrier, label=f"{cmd.library}.{cmd.routine}")
+        except Exception as e:   # e.g. scheduler shut down: stay on-wire
             return protocol.encode_result(protocol.Result(
                 values={}, error=f"{type(e).__name__}: {e}",
                 session=cmd.session))
-        elapsed = time.perf_counter() - t0
         return protocol.encode_result(protocol.Result(
-            values=values, elapsed=elapsed, session=cmd.session))
+            values={"task": task.id}, session=cmd.session,
+            task=task.id, state=task.state))
+
+    def task_op(self, wire_op: bytes) -> bytes:
+        """Protocol endpoint for poll/wait. ``poll`` replies with the
+        task's current state without blocking; ``wait`` blocks until the
+        task is terminal and replies with its full Result (queue-wait vs
+        execute split included). Tasks are session-scoped: a client may
+        only observe its own."""
+        try:
+            op = protocol.decode_task_op(wire_op)
+            task = self.scheduler.task(op.task)
+            if task.session != op.session:
+                raise KeyError(
+                    f"task #{op.task} does not belong to session "
+                    f"#{op.session}")
+        except Exception as e:
+            return protocol.encode_result(protocol.Result(
+                values={}, error=f"{type(e).__name__}: {e}"))
+        if op.action == protocol.WAIT:
+            try:
+                return self.wait_task(op.task, session=op.session)
+            except Exception as e:   # e.g. a concurrent waiter released
+                return protocol.encode_result(protocol.Result(
+                    values={}, error=f"{type(e).__name__}: {e}",
+                    session=op.session))
+        return protocol.encode_result(protocol.Result(
+            values={"task": task.id, "state": task.state},
+            session=op.session, task=task.id, state=task.state,
+            wait_s=task.wait_s, exec_s=task.exec_s))
+
+    def wait_task(self, task_id: int, session: int) -> bytes:
+        """Block until a task is terminal; return its Result bytes with
+        the task id, final state, and wait/execute timing stamped in.
+
+        Delivery releases the task's table row (unless a dependent still
+        needs it): wait is how results leave the engine, and long-lived
+        sessions issuing millions of blocking calls must not accumulate
+        rows. Deferred placeholders are therefore valid until their
+        producer's result is delivered — after that the client holds the
+        real handles (``AlFuture`` caches them)."""
+        task = self.scheduler.wait(task_id)
+        if task.result is not None:
+            res = protocol.decode_result(task.result)
+        else:
+            res = protocol.Result(
+                values={}, error=task.error or "task failed",
+                session=session)
+        res = dataclasses.replace(
+            res, task=task.id, state=task.state,
+            wait_s=task.wait_s, exec_s=task.exec_s)
+        self.scheduler.release(task_id)
+        return protocol.encode_result(res)
+
+    def _hazards(self, cmd: protocol.Command
+                 ) -> tuple[set[int], set[int], set[int]]:
+        """Scheduling constraints read off a command's args: handle args
+        are reads (writes when the routine declares that arg in its
+        ``writes`` attribute), deferred handles are data dependencies on
+        their producer tasks. The routine's declaration is consulted
+        best-effort — an unloaded library simply yields no write set,
+        which is safe for the read-only ALI routines."""
+        reads: set[int] = set()
+        writes: set[int] = set()
+        data_deps: set[int] = set()
+        fn = self._libraries.get(cmd.library, {}).get(cmd.routine)
+        written_args = set(getattr(fn, "writes", ()) or ())
+
+        def walk(key, v):
+            if isinstance(v, MatrixHandle):
+                (writes if key in written_args else reads).add(v.id)
+            elif isinstance(v, protocol.DeferredHandle):
+                data_deps.add(v.task)
+            elif isinstance(v, dict):
+                for x in v.values():
+                    walk(key, x)
+            elif isinstance(v, (list, tuple)):
+                for x in v:
+                    walk(key, x)
+
+        for k, v in cmd.args.items():
+            walk(k, v)
+        return reads, writes, data_deps
+
+    def _resolve_deferred(self, cmd: protocol.Command) -> protocol.Command:
+        """Swap DeferredHandle placeholders for the real MatrixHandles
+        their producer tasks minted. Runs on the worker thread just
+        before dispatch; producers are guaranteed terminal (data edges)
+        and DONE (failed producers fail the consumer in the scheduler)."""
+        def resolve(v):
+            if isinstance(v, protocol.DeferredHandle):
+                producer = self.scheduler.task(v.task)
+                res = protocol.decode_result(producer.result)
+                out = res.values.get(v.key)
+                if not isinstance(out, MatrixHandle):
+                    raise KeyError(
+                        f"task #{v.task} produced no handle named "
+                        f"{v.key!r} (outputs: {sorted(res.values)})")
+                return out
+            if isinstance(v, dict):
+                return {k: resolve(x) for k, x in v.items()}
+            if isinstance(v, list):
+                return [resolve(x) for x in v]
+            return v
+
+        return dataclasses.replace(cmd, args=resolve(cmd.args))
+
+    def _run_task(self, cmd: protocol.Command) -> bytes:
+        """Task body run on a scheduler worker: resolve deferred args,
+        dispatch the routine, encode the Result. A total exception
+        barrier converts every failure (unresolvable deferred, routine
+        raising, unserializable outputs) into an encoded error Result
+        raised as TaskFailure, so the task lands in FAILED with the error
+        available to waiters — and the worker pool survives."""
+        try:
+            cmd = self._resolve_deferred(cmd)
+            sess = self.session(cmd.session)
+            if cmd.library == ENGINE_LIBRARY:
+                fn = self._BUILTINS.get(cmd.routine)
+                if fn is None:
+                    raise LibraryNotRegistered(
+                        f"routine {cmd.routine!r} not in {ENGINE_LIBRARY!r}")
+            else:
+                lib = self._libraries.get(cmd.library)
+                if lib is None:
+                    raise LibraryNotRegistered(
+                        f"library {cmd.library!r} not registered")
+                fn = lib.get(cmd.routine)
+                if fn is None:
+                    raise LibraryNotRegistered(
+                        f"routine {cmd.routine!r} not in {cmd.library!r}")
+            sess.commands += 1
+            view = SessionView(self, sess)
+            t0 = time.perf_counter()
+            values = fn(view, **cmd.args)
+            elapsed = time.perf_counter() - t0
+            return protocol.encode_result(protocol.Result(
+                values=values, elapsed=elapsed, session=cmd.session))
+        except LibraryNotRegistered as e:
+            raise scheduling.TaskFailure(
+                protocol.encode_result(protocol.Result(
+                    values={}, error=str(e), session=cmd.session)),
+                str(e))
+        except Exception as e:
+            msg = f"{type(e).__name__}: {e}"
+            raise scheduling.TaskFailure(
+                protocol.encode_result(protocol.Result(
+                    values={}, error=msg, session=cmd.session)), msg)
+
+    # ---- engine builtins (wire-reachable under ENGINE_LIBRARY) ----
+    def _builtin_load_library(view, name: str, module: str):
+        """Wire path for library registration: import ``module`` by path
+        and register its ROUTINES under ``name``. Submitted as a scheduler
+        *barrier*, so loading serializes with every in-flight task — no
+        routine observes a half-registered library, mirroring dlopen()
+        under the MPI world lock."""
+        view._engine.load_library(name, importlib.import_module(module))
+        return {"library": name, "loaded": True}
+
+    _BUILTINS = {"load_library": _builtin_load_library}
+
+    def _record_task(self, task: scheduling.Task) -> None:
+        """Scheduler completion hook -> per-task cost accounting."""
+        self.task_log.record(
+            session=task.session, label=task.label, state=task.state,
+            wait_s=task.wait_s, exec_s=task.exec_s)

@@ -111,8 +111,11 @@ def spark_truncated_svd(x: RowMatrix, k: int, oversample: int = 32,
     stats = {
         "bsp_rounds": rounds,
         "measured_seconds": measured,
-        "modeled_round_overhead_seconds": spark_cg_iteration_seconds(
-            nodes, n, d) - 0.0,
+        # same Table-2 calibration as CG: the modeled cost of ONE BSP
+        # round (matvec treeAggregate) at cluster scale, not an overhead
+        # delta — hence the same key name as spark_cg_solve's
+        "modeled_iteration_seconds": spark_cg_iteration_seconds(
+            nodes, n, d),
         "lanczos_iters": int(m),
     }
     return sigma, V, stats

@@ -8,9 +8,20 @@ Three message kinds cross the client/engine boundary, all msgpack-encoded:
   ``disconnect`` releases everything that session owns.
 * ``Command`` — one routine invocation, tagged with the issuing session so
   the engine can resolve matrix handles inside that session's namespace.
+  A Command delivered to ``engine.run`` executes blocking (submit+wait); the
+  same bytes delivered to ``engine.submit`` enqueue an asynchronous task and
+  return immediately with a task ID. Args may carry
+  :class:`DeferredHandle` placeholders naming the not-yet-produced outputs
+  of earlier submitted tasks (server-side chaining with zero client round
+  trips — the paper's §3.3.2 resident-matrix chaining, now pipelined).
+* ``TaskOp`` — ``poll`` (non-blocking state query) or ``wait`` (block until
+  terminal) against a previously submitted task, scoped to the owning
+  session.
 * ``Result`` — values, timing, the echoing session, and an ``error`` string
   (empty on success) so engine-side failures propagate as data instead of
-  exceptions, exactly like an error status on the socket.
+  exceptions, exactly like an error status on the socket. For scheduled
+  tasks it also reports the task ID, its state, and the queue-wait vs
+  execute split (``wait_s``/``exec_s``).
 
 Distributed matrices never cross here — they move through the transfer
 layer (``core/transfer.py``, §3.2) and are referenced by handle ID. Running
@@ -26,9 +37,13 @@ from typing import Any
 import msgpack
 
 _HANDLE_TAG = "__handle__"
+_DEFERRED_TAG = "__deferred__"
 
 CONNECT = "connect"
 DISCONNECT = "disconnect"
+
+POLL = "poll"
+WAIT = "wait"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,17 +74,50 @@ class Command:
 
 
 @dataclasses.dataclass(frozen=True)
+class DeferredHandle:
+    """A placeholder for the not-yet-existing output of a submitted task.
+
+    ``task`` is the producing task's ID, ``key`` the name of the output in
+    its Result values (e.g. the ``"Q"`` of a ``qr`` call). Passing one as a
+    Command arg makes the engine (a) add a dependency edge on the producer
+    and (b) resolve the placeholder to the real MatrixHandle just before
+    the consumer runs — chained calls pipeline engine-side while the
+    client keeps submitting.
+    """
+    task: int
+    key: str
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskOp:
+    """Task-table query: ``poll`` returns the task's current state without
+    blocking; ``wait`` blocks until DONE/FAILED and returns its Result.
+    ``session`` must be the task's owning session (task isolation)."""
+    action: str
+    task: int
+    session: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
 class Result:
-    """Engine reply to a Command or Handshake (§3.1.2).
+    """Engine reply to a Command, TaskOp or Handshake (§3.1.2).
 
     ``error`` is empty on success; on failure it carries the engine-side
     exception rendered as ``"ExcType: message"``. ``session`` echoes the
-    session the reply belongs to.
+    session the reply belongs to. Replies about scheduled tasks carry the
+    ``task`` ID, its ``state`` (QUEUED/RUNNING/DONE/FAILED) and the
+    latency split: ``wait_s`` queued behind dependencies and worker
+    availability, ``exec_s`` actually executing (``elapsed`` keeps the
+    legacy meaning: routine execution time).
     """
     values: dict[str, Any]
     elapsed: float = 0.0
     error: str = ""
     session: int = 0
+    task: int = 0
+    state: str = ""
+    wait_s: float = 0.0
+    exec_s: float = 0.0
 
 
 def _pack_value(v):
@@ -77,6 +125,8 @@ def _pack_value(v):
 
     if isinstance(v, MatrixHandle):
         return {_HANDLE_TAG: [v.id, list(v.shape), v.dtype, v.layout, v.name]}
+    if isinstance(v, DeferredHandle):
+        return {_DEFERRED_TAG: [v.task, v.key]}
     if isinstance(v, (list, tuple)):
         return [_pack_value(x) for x in v]
     if isinstance(v, dict):
@@ -97,6 +147,9 @@ def _unpack_value(v):
             hid, shape, dtype, layout, name = v[_HANDLE_TAG]
             return MatrixHandle(id=hid, shape=tuple(shape), dtype=dtype,
                                 layout=layout, name=name)
+        if _DEFERRED_TAG in v:
+            task, key = v[_DEFERRED_TAG]
+            return DeferredHandle(task=task, key=key)
         return {k: _unpack_value(x) for k, x in v.items()}
     if isinstance(v, list):
         return [_unpack_value(x) for x in v]
@@ -140,6 +193,24 @@ def decode_command(data: bytes) -> Command:
                    args=_unpack_value(d["args"]), session=d["session"])
 
 
+def encode_task_op(op: TaskOp) -> bytes:
+    """Serialize a poll/wait task query."""
+    if op.action not in (POLL, WAIT):
+        raise ValueError(f"unknown task-op action {op.action!r}")
+    return msgpack.packb({
+        "action": op.action,
+        "task": op.task,
+        "session": op.session,
+    })
+
+
+def decode_task_op(data: bytes) -> TaskOp:
+    """Inverse of :func:`encode_task_op`."""
+    d = msgpack.unpackb(data)
+    # like Command.session: a missing session must not default to system
+    return TaskOp(action=d["action"], task=d["task"], session=d["session"])
+
+
 def encode_result(res: Result) -> bytes:
     """Serialize a Result (values + timing + error + session echo)."""
     return msgpack.packb({
@@ -147,11 +218,18 @@ def encode_result(res: Result) -> bytes:
         "elapsed": res.elapsed,
         "error": res.error,
         "session": res.session,
+        "task": res.task,
+        "state": res.state,
+        "wait_s": res.wait_s,
+        "exec_s": res.exec_s,
     })
 
 
 def decode_result(data: bytes) -> Result:
-    """Inverse of :func:`encode_result`."""
+    """Inverse of :func:`encode_result` (task/timing fields default for
+    pre-scheduler wire bytes)."""
     d = msgpack.unpackb(data)
     return Result(values=_unpack_value(d["values"]), elapsed=d["elapsed"],
-                  error=d["error"], session=d.get("session", 0))
+                  error=d["error"], session=d.get("session", 0),
+                  task=d.get("task", 0), state=d.get("state", ""),
+                  wait_s=d.get("wait_s", 0.0), exec_s=d.get("exec_s", 0.0))

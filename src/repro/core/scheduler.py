@@ -1,0 +1,383 @@
+"""Hazard-aware asynchronous task scheduler — the engine's dispatch core.
+
+The paper's Alchemist "can serve several Spark applications at a time"
+(§3.1.1); the Cray deployment follow-up (Rothauge et al., 2019) shows the
+request-overlap regime is exactly where the bridge wins or loses. PR 1
+serialized every command from every session through one FIFO drained under
+a dispatch lock, so one client's 50-iteration Lanczos head-of-line-blocked
+every other client's 2ms multiply. This module replaces that FIFO with a
+task table and a worker pool:
+
+* every submitted command becomes a :class:`Task` moving through
+  ``QUEUED -> RUNNING -> DONE | FAILED``;
+* tasks from *different* sessions run concurrently on the worker pool;
+* correctness constraints are dependency edges, computed at submit time:
+
+  - **program order** — a task depends on the previous task of its own
+    session, so one client's calls never reorder or overlap each other;
+  - **read/write hazards** — per engine-resident handle, a task that
+    *writes* handle H waits for the prior writer and every reader since
+    (and later readers wait for it), while concurrent *readers* of H are
+    unordered among themselves;
+  - **data dependencies** — a task consuming another task's *deferred*
+    output (a handle that does not exist yet; see
+    ``protocol.DeferredHandle``) waits for the producer, and fails —
+    without running — if the producer failed. Only data edges propagate
+    failure: a client's failed call never poisons its later, independent
+    calls, and never another session's future;
+  - **barriers** — a barrier task (engine library loading) waits for every
+    in-flight task, and every later task waits for it.
+
+The scheduler is engine-agnostic: it runs ``task.fn(task)`` thunks and
+records per-task queue-wait vs execute time, leaving protocol encoding to
+the engine. ``max_running_observed`` exposes the concurrency high-water
+mark so tests and the multi-client benchmark can prove overlap is real.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Any, Callable, Iterable, Optional
+
+QUEUED = "QUEUED"
+RUNNING = "RUNNING"
+DONE = "DONE"
+FAILED = "FAILED"
+
+
+class TaskFailure(Exception):
+    """Raised by a task body to fail the task while keeping a payload
+    (e.g. an already-encoded error Result) available to waiters."""
+
+    def __init__(self, payload: Any, message: str = ""):
+        super().__init__(message or "task failed")
+        self.payload = payload
+
+
+@dataclasses.dataclass
+class Task:
+    """One row of the task table.
+
+    ``deps`` is the number of unfinished dependency edges; the task
+    becomes runnable at zero. ``data_deps`` names producer tasks whose
+    failure must propagate here (deferred-handle edges only).
+    ``wait_s``/``exec_s`` split the task's latency into time spent queued
+    behind dependencies and worker availability vs time actually running.
+    """
+    id: int
+    session: int
+    fn: Callable[["Task"], Any]
+    label: str = ""
+    barrier: bool = False
+    state: str = QUEUED
+    deps: int = 0
+    data_deps: tuple[int, ...] = ()
+    reads: tuple[int, ...] = ()       # handle ids, for hazard-map pruning
+    writes: tuple[int, ...] = ()
+    dependents: list[int] = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    started_at: float = 0.0
+    finished_at: float = 0.0
+    wait_s: float = 0.0
+    exec_s: float = 0.0
+    result: Any = None
+    error: str = ""
+
+
+class TaskScheduler:
+    """Task table + dependency edges + worker-thread pool.
+
+    ``num_workers=1`` degenerates to the PR-1 serialized dispatch (still
+    hazard- and order-correct) — the baseline the multi-client throughput
+    benchmark compares against. ``on_finish`` is called (outside the
+    scheduler lock) with each task as it completes, in completion order —
+    the engine uses it for per-task cost accounting.
+    """
+
+    def __init__(self, num_workers: int = 4,
+                 on_finish: Optional[Callable[[Task], None]] = None):
+        self.num_workers = max(1, int(num_workers))
+        self.on_finish = on_finish
+        self._cv = threading.Condition()
+        self._tasks: dict[int, Task] = {}
+        self._ids = itertools.count(1)
+        self._ready: collections.deque[int] = collections.deque()
+        self._session_tail: dict[int, int] = {}
+        self._barrier_tail: Optional[int] = None
+        self._writer: dict[int, int] = {}          # handle id -> last writer
+        self._readers: dict[int, set[int]] = {}    # handle id -> readers since
+        self._threads: list[threading.Thread] = []
+        self._finished: collections.deque[Task] = collections.deque()
+        self._cb_lock = threading.Lock()
+        self._shutdown = False
+        self._running = 0
+        self.max_running_observed = 0
+
+    # ---- submission -----------------------------------------------------
+    def submit(self, fn: Callable[[Task], Any], *, session: int = 0,
+               reads: Iterable[int] = (), writes: Iterable[int] = (),
+               data_deps: Iterable[int] = (), barrier: bool = False,
+               label: str = "") -> Task:
+        """Add a task; returns immediately with the QUEUED task.
+
+        ``reads``/``writes`` are engine handle IDs the task will resolve
+        (write implies read); ``data_deps`` are producer task IDs whose
+        deferred outputs the task consumes; ``barrier=True`` serializes
+        against every in-flight task, before and after.
+        """
+        reads, writes = set(reads), set(writes)
+        reads -= writes
+        with self._cv:
+            if self._shutdown:
+                raise RuntimeError("scheduler is shut down")
+            task = Task(id=next(self._ids), session=session, fn=fn,
+                        label=label, barrier=barrier,
+                        data_deps=tuple(dict.fromkeys(data_deps)),
+                        reads=tuple(reads), writes=tuple(writes),
+                        submitted_at=time.perf_counter())
+            deps: set[int] = set()
+
+            def live(tid: Optional[int]) -> bool:
+                t = self._tasks.get(tid) if tid is not None else None
+                return t is not None and t.state in (QUEUED, RUNNING)
+
+            prev = self._session_tail.get(session)
+            if live(prev):
+                deps.add(prev)
+            if live(self._barrier_tail):
+                deps.add(self._barrier_tail)
+            if barrier:
+                deps.update(t.id for t in self._tasks.values()
+                            if t.state in (QUEUED, RUNNING))
+                self._barrier_tail = task.id
+            for h in reads:
+                if live(self._writer.get(h)):
+                    deps.add(self._writer[h])
+                self._readers.setdefault(h, set()).add(task.id)
+            for h in writes:
+                if live(self._writer.get(h)):
+                    deps.add(self._writer[h])
+                deps.update(t for t in self._readers.get(h, ())
+                            if live(t) and t != task.id)
+                self._writer[h] = task.id
+                self._readers[h] = set()
+            for tid in task.data_deps:
+                if live(tid):
+                    deps.add(tid)
+            deps.discard(task.id)
+
+            self._tasks[task.id] = task
+            self._session_tail[session] = task.id
+            task.deps = len(deps)
+            for d in deps:
+                self._tasks[d].dependents.append(task.id)
+            if task.deps == 0:
+                self._ready.append(task.id)
+            self._spawn_workers()
+            self._cv.notify_all()
+            return task
+
+    # ---- inspection -----------------------------------------------------
+    def task(self, task_id: int) -> Task:
+        with self._cv:
+            t = self._tasks.get(task_id)
+            if t is None:
+                raise KeyError(f"unknown task #{task_id}")
+            return t
+
+    def counts(self) -> dict[str, int]:
+        """Number of tasks per state (a snapshot of the task table)."""
+        with self._cv:
+            c = collections.Counter(t.state for t in self._tasks.values())
+            return {s: c.get(s, 0) for s in (QUEUED, RUNNING, DONE, FAILED)}
+
+    def release(self, task_id: int) -> bool:
+        """Drop one *terminal* task row after its result was delivered —
+        long-lived sessions issuing blocking calls must not accumulate
+        table rows (the old FIFO popped results on delivery too). The
+        row is kept while any dependent is still queued/running (failure
+        propagation and deferred resolution read it) and dropped at
+        disconnect otherwise. Returns True if the row was removed."""
+        with self._cv:
+            t = self._tasks.get(task_id)
+            if t is None:
+                return True
+            if t.state not in (DONE, FAILED):
+                return False
+            for d in t.dependents:
+                dep = self._tasks.get(d)
+                if dep is not None and dep.state in (QUEUED, RUNNING):
+                    return False
+            del self._tasks[task_id]
+            if self._session_tail.get(t.session) == task_id:
+                self._session_tail.pop(t.session, None)
+            return True
+
+    def forget_session(self, session: int) -> int:
+        """Drop a departed session's *terminal* tasks (and their retained
+        results) from the table — the engine calls this on disconnect,
+        after draining, so the table stays bounded by connected tenants'
+        work. Task results are retained until then: waiters and deferred
+        consumers resolve against them. Returns the number dropped."""
+        with self._cv:
+            gone = [tid for tid, t in self._tasks.items()
+                    if t.session == session and t.state in (DONE, FAILED)]
+            for tid in gone:
+                del self._tasks[tid]
+            if self._session_tail.get(session) is not None and \
+                    self._session_tail[session] not in self._tasks:
+                self._session_tail.pop(session, None)
+            return len(gone)
+
+    def running(self) -> int:
+        with self._cv:
+            return self._running
+
+    # ---- waiting --------------------------------------------------------
+    def wait(self, task_id: int, timeout: Optional[float] = None) -> Task:
+        """Block until the task reaches DONE or FAILED; returns it."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            t = self._tasks.get(task_id)
+            if t is None:
+                raise KeyError(f"unknown task #{task_id}")
+            while t.state in (QUEUED, RUNNING):
+                remaining = None if deadline is None \
+                    else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"task #{task_id} still {t.state} after {timeout}s")
+                self._cv.wait(remaining)
+            return t
+
+    def wait_session(self, session: int,
+                     timeout: Optional[float] = None) -> None:
+        """Block until the session has no QUEUED/RUNNING tasks (used by
+        disconnect so teardown never races in-flight work)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            def pending():
+                return [t for t in self._tasks.values()
+                        if t.session == session
+                        and t.state in (QUEUED, RUNNING)]
+            while pending():
+                remaining = None if deadline is None \
+                    else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"session #{session} still has {len(pending())} "
+                        f"in-flight tasks after {timeout}s")
+                self._cv.wait(remaining)
+
+    def shutdown(self) -> None:
+        """Stop accepting tasks and join the worker threads. In-flight
+        tasks finish; QUEUED tasks are failed."""
+        with self._cv:
+            self._shutdown = True
+            for t in self._tasks.values():
+                if t.state == QUEUED:
+                    t.state = FAILED
+                    t.error = "scheduler shut down"
+                    t.finished_at = time.perf_counter()
+            self._ready.clear()
+            self._cv.notify_all()
+        for th in self._threads:
+            th.join(timeout=5.0)
+
+    # ---- worker pool ----------------------------------------------------
+    def _spawn_workers(self) -> None:
+        # Lazy spawn (under the lock): engines that never dispatch a task
+        # never pay for idle threads.
+        while len(self._threads) < self.num_workers:
+            th = threading.Thread(target=self._worker, daemon=True,
+                                  name=f"alchemist-worker-{len(self._threads)}")
+            self._threads.append(th)
+            th.start()
+
+    def _worker(self) -> None:
+        while True:
+            with self._cv:
+                while not self._ready and not self._shutdown:
+                    self._cv.wait()
+                if self._shutdown and not self._ready:
+                    return
+                task = self._tasks[self._ready.popleft()]
+                task.state = RUNNING
+                task.started_at = time.perf_counter()
+                task.wait_s = task.started_at - task.submitted_at
+                self._running += 1
+                self.max_running_observed = max(self.max_running_observed,
+                                                self._running)
+                # a pruned (forgotten) data dep is not failed — if the
+                # task truly needs its result, resolution fails cleanly
+                failed = next(
+                    ((d, t.error) for d in task.data_deps
+                     if (t := self._tasks.get(d)) is not None
+                     and t.state == FAILED), None)
+            if failed is not None:
+                self._finish(task, FAILED, None,
+                             f"upstream task #{failed[0]} failed: "
+                             f"{failed[1]}")
+                continue
+            try:
+                result = task.fn(task)
+            except TaskFailure as e:
+                self._finish(task, FAILED, e.payload, str(e))
+            except Exception as e:  # total barrier: a crashing task body
+                self._finish(task, FAILED, None,     # must not kill workers
+                             f"{type(e).__name__}: {e}")
+            else:
+                self._finish(task, DONE, result, "")
+
+    def _finish(self, task: Task, state: str, result: Any,
+                error: str) -> None:
+        with self._cv:
+            task.finished_at = time.perf_counter()
+            task.exec_s = task.finished_at - task.started_at
+            task.state = state
+            task.result = result
+            task.error = error
+            self._running -= 1
+            for dep_id in task.dependents:
+                dep = self._tasks.get(dep_id)
+                if dep is None:                # forgotten with its session
+                    continue
+                dep.deps -= 1
+                if dep.deps == 0 and dep.state == QUEUED:
+                    self._ready.append(dep_id)
+            # hazard maps track only live constraints: a finished task
+            # imposes none, so drop its entries (bounds both maps by the
+            # in-flight task count)
+            for h in task.reads:
+                readers = self._readers.get(h)
+                if readers is not None:
+                    readers.discard(task.id)
+                    if not readers:
+                        self._readers.pop(h, None)
+            for h in task.writes:
+                if self._writer.get(h) == task.id:
+                    self._writer.pop(h, None)
+                if not self._readers.get(h):
+                    self._readers.pop(h, None)
+            if self.on_finish is not None:
+                self._finished.append(task)    # ordered under the lock
+            self._cv.notify_all()
+        # Deliver on_finish strictly in completion order: completions
+        # enqueue under the scheduler lock above, and whichever worker
+        # holds the callback lock drains the queue head-first (a worker
+        # may deliver another worker's completion — order is what's
+        # guaranteed, not the delivering thread).
+        if self.on_finish is not None:
+            with self._cb_lock:
+                while True:
+                    with self._cv:
+                        if not self._finished:
+                            break
+                        done = self._finished.popleft()
+                    try:
+                        self.on_finish(done)
+                    except Exception:   # accounting must never kill a
+                        pass            # worker

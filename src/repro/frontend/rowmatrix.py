@@ -16,12 +16,25 @@ from repro.frontend.rdd import RDD
 
 
 class RowMatrix:
-    def __init__(self, rdd: RDD, num_rows: int, num_cols: int,
+    def __init__(self, rdd: RDD, num_rows: int,
+                 num_cols: Optional[int] = None,
                  row_offsets: Optional[list[int]] = None):
         self.rdd = rdd
         self.num_rows = num_rows
-        self.num_cols = num_cols
+        self._num_cols = num_cols
         self.row_offsets = row_offsets
+
+    @property
+    def num_cols(self) -> int:
+        """Column count; ``None`` at construction means *derive lazily*
+        from the first partition on first access (a transformation like
+        ``map_rows`` must not eagerly run its function just to learn the
+        output width — lineage stays lazy, like Spark's)."""
+        if self._num_cols is None:
+            first = np.asarray(self.rdd.partition(0))
+            # same convention as from_array: 1-D partitions are one column
+            self._num_cols = first.shape[1] if first.ndim > 1 else 1
+        return self._num_cols
 
     @property
     def shape(self) -> tuple[int, int]:
@@ -62,9 +75,12 @@ class RowMatrix:
 
     # ---- client-side ops (the "pure Spark" substrate) ----
     def map_rows(self, fn: Callable[[np.ndarray], np.ndarray]) -> "RowMatrix":
+        """Apply ``fn`` per partition. Purely lazy: the output width is
+        derived from the mapped RDD on first ``num_cols`` access instead
+        of eagerly invoking ``fn`` on partition 0 a second time (which
+        doubled partition-0 work and crashed on 1-D outputs)."""
         rdd = self.rdd.map_partitions(fn, "map_rows")
-        first = fn(self.rdd.partition(0))
-        return RowMatrix(rdd, self.num_rows, first.shape[1])
+        return RowMatrix(rdd, self.num_rows, None)
 
     def collect(self) -> np.ndarray:
         return np.concatenate(self.rdd.collect(), axis=0)

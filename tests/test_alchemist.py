@@ -170,3 +170,32 @@ def test_concurrent_sessions_share_engine():
     assert ac2.session != engine_ctx.session
     res = ac2.call("elemental", "random_matrix", rows=8, cols=8)
     assert res["A"].shape == (8, 8)
+
+
+def test_mllib_stats_dict_contract():
+    """Both pure-Spark entry points report the same accounting contract:
+    measured wall time, BSP round count, and the Table-2-calibrated
+    modeled per-round cost under one shared key name."""
+    x = RowMatrix.from_array(RNG.randn(120, 10), 4)
+    y = RowMatrix.from_array(RNG.randn(120, 2), 4)
+
+    _, cg_stats = mllib.spark_cg_solve(x, y, lam=1e-3, max_iters=50)
+    assert set(cg_stats) == {"iterations", "bsp_rounds",
+                             "relative_residual", "measured_seconds",
+                             "modeled_iteration_seconds"}
+
+    _, _, svd_stats = mllib.spark_truncated_svd(x, k=3)
+    assert set(svd_stats) == {"bsp_rounds", "measured_seconds",
+                              "modeled_iteration_seconds", "lanczos_iters"}
+    assert "modeled_round_overhead_seconds" not in svd_stats
+
+    for stats in (cg_stats, svd_stats):
+        assert stats["bsp_rounds"] >= 1
+        assert stats["measured_seconds"] > 0
+        assert stats["modeled_iteration_seconds"] > 0
+    # the modeled per-round cost is the same quantity in both entry
+    # points: identical (nodes, shape) must price identically
+    _, cg12 = mllib.spark_cg_solve(x, y, lam=1e-3, max_iters=5, nodes=12)
+    _, _, svd12 = mllib.spark_truncated_svd(x, k=3, nodes=12)
+    assert cg12["modeled_iteration_seconds"] == \
+        svd12["modeled_iteration_seconds"]

@@ -52,3 +52,29 @@ def test_rowmatrix_random_is_reproducible():
     np.testing.assert_array_equal(m1.collect(), m2.collect())
     m1.rdd.lose_partition(1)
     np.testing.assert_array_equal(m1.collect(), m2.collect())
+
+
+def test_map_rows_is_lazy_and_derives_width_from_output():
+    """map_rows must not eagerly re-invoke fn on partition 0; the output
+    width comes from the mapped lineage (1-D outputs count as 1 col)."""
+    import numpy as np
+    from repro.frontend.rowmatrix import RowMatrix
+
+    x = np.arange(24, dtype=np.float64).reshape(12, 2)
+    rm = RowMatrix.from_array(x, num_partitions=3)
+    calls = []
+
+    def double_cols(block):
+        calls.append(block.shape)
+        return np.hstack([block, block])
+
+    mapped = rm.map_rows(double_cols)
+    assert calls == []                     # construction ran nothing
+    assert mapped.num_cols == 4            # lazily derived on access
+    np.testing.assert_array_equal(mapped.collect(), np.hstack([x, x]))
+    # fn ran once per partition, never twice on partition 0
+    assert len(calls) == 3 + 1             # +1: num_cols peeked part. 0
+
+    # 1-D outputs no longer crash: convention matches from_array
+    norms = rm.map_rows(lambda b: np.linalg.norm(b, axis=1))
+    assert norms.num_cols == 1
