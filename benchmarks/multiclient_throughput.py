@@ -86,9 +86,15 @@ def _light_loop(ac, mats, deadline, latencies):
 
 def _run_config(num_clients: int, duration_s: float, k: int,
                 workers: int) -> dict:
-    """1 heavy + (num_clients-1) light tenants against a fresh engine."""
+    """1 heavy + (num_clients-1) light tenants against a fresh engine.
+
+    The routine cache is disabled: every tenant here repeats identical
+    calls on its resident matrices, which the content-addressed cache
+    would short-circuit entirely — this benchmark measures *dispatch*
+    (FIFO vs worker pool); ``benchmarks/cache_amortization.py`` measures
+    the cache."""
     engine = AlchemistEngine(make_engine_mesh(1),
-                            scheduler_workers=workers)
+                            scheduler_workers=workers, cache_entries=0)
     engine.load_library("elemental", elemental)
     rng = np.random.RandomState(0)
 

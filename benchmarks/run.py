@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
 import sys
 
 from benchmarks import (
+    cache_amortization,
     fig3_weak_scaling,
     kernel_bench,
     multiclient_throughput,
@@ -28,6 +29,8 @@ ALL = {
     # smoke-sized here; the standalone script exposes the full sweep
     "multiclient": lambda: multiclient_throughput.run(
         [1, 2, 4], duration_s=2.0, k=8, workers=2),
+    "cache": lambda: cache_amortization.run(
+        3, (512, 128), k=8, smoke=False),
 }
 
 

@@ -37,7 +37,10 @@ def run() -> None:
 
     for chunk_rows in CHUNK_ROW_SWEEP:
         def send():
-            al = ac.send_matrix(x, chunk_rows=chunk_rows)
+            # dedup=False: this sweep measures raw streaming bandwidth —
+            # content hashing (and the alias short-circuit it enables)
+            # would make every re-send a zero-byte no-op
+            al = ac.send_matrix(x, chunk_rows=chunk_rows, dedup=False)
             al.free()
 
         t = timeit(send, warmup=1, iters=3)

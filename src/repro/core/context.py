@@ -92,14 +92,18 @@ class AlchemistContext:
 
     # ---- data movement (the streaming transfer layer, §3.2) ----
     def send_matrix(self, matrix, name: Optional[str] = None,
-                    chunk_rows: Optional[int] = None) -> "AlMatrix":
+                    chunk_rows: Optional[int] = None,
+                    dedup: bool = True) -> "AlMatrix":
         """Stream a client matrix to the engine in row-block chunks and
-        wrap the resulting session-owned handle."""
+        wrap the resulting session-owned handle. With ``dedup`` (default)
+        a re-upload of content the engine already holds short-circuits to
+        a handle alias — zero bytes cross, and ``last_transfer.dedup``
+        marks the saved crossing."""
         self._check_alive()
         handle, rec = transfer.to_engine(
             self.engine, matrix, name=name, session=self.session,
             chunk_rows=chunk_rows if chunk_rows is not None
-            else self.chunk_rows)
+            else self.chunk_rows, dedup=dedup)
         return AlMatrix(self, handle, last_transfer=rec)
 
     def fetch(self, handle: MatrixHandle, num_partitions: int = 8,
@@ -132,6 +136,11 @@ class AlchemistContext:
         deferred outputs of earlier futures (``earlier["Q"]``): deferred
         args become dependency edges engine-side, so a whole chain can be
         submitted in one burst and pipelines without further round trips.
+
+        If the engine's content-addressed routine cache already holds this
+        exact computation, the future comes back *already completed*
+        (DONE-on-submit): no task is minted, ``result()`` returns without
+        blocking, and ``_cache_hit``/``_saved_s`` report the skip.
         """
         self._check_alive()
         args = {k: self._as_arg(v) for k, v in kwargs.items()}
@@ -141,7 +150,10 @@ class AlchemistContext:
         sub = protocol.decode_result(self.engine.submit(wire))
         if sub.error:
             raise AlchemistError(sub.error)
-        return AlFuture(self, sub.task, label=f"{library}.{routine}")
+        fut = AlFuture(self, sub.task, label=f"{library}.{routine}")
+        if sub.cache_hit:
+            fut._result = sub           # served at submit; nothing to wait
+        return fut
 
     @staticmethod
     def _as_arg(v):
@@ -240,7 +252,9 @@ class AlFuture:
     def result(self) -> dict[str, Any]:
         """Block until the task completes; return its outputs plus
         ``_elapsed`` (execute seconds, legacy key), ``_wait_s`` (queued
-        behind dependencies/workers) and ``_exec_s``. Raises
+        behind dependencies/workers), ``_exec_s``, and the cache fields
+        ``_cache_hit``/``_saved_s`` (True and the avoided execute seconds
+        when the engine served this from its routine cache). Raises
         :class:`AlchemistError` if the routine failed.
 
         Fetch before ``ac.stop()``: disconnect drops the session's
@@ -257,6 +271,8 @@ class AlFuture:
         out["_elapsed"] = res.elapsed
         out["_wait_s"] = res.wait_s
         out["_exec_s"] = res.exec_s
+        out["_cache_hit"] = res.cache_hit
+        out["_saved_s"] = res.saved_s
         return out
 
 

@@ -72,6 +72,12 @@ def stream_transfer_seconds(nbytes: int, chunk_bytes: int,
     engine-side re-layout for every chunk except the last (the
     :data:`PIPELINE_FRACTION` discount). Minimized at a mid-size chunk —
     the sweep in ``benchmarks/table3_transfer.py`` exposes the curve.
+
+    This is the *uniform-chunk* form (the what-if knob the Table-3 sweep
+    turns); for a stream that actually crossed, model from its real
+    chunk-size list with :func:`stream_transfer_seconds_from_chunks` —
+    shard-boundary cuts produce runt chunks that a mean-size model
+    mis-prices.
     """
     chunk_bytes = max(1, int(chunk_bytes))
     num_chunks = max(1, -(-int(nbytes) // chunk_bytes))
@@ -79,6 +85,36 @@ def stream_transfer_seconds(nbytes: int, chunk_bytes: int,
     if num_chunks > 1:
         wire *= 1.0 - PIPELINE_FRACTION * (num_chunks - 1) / num_chunks
     return num_chunks * CHUNK_LATENCY_S + wire
+
+
+def stream_chunk_seconds(chunk_nbytes: int, client_procs: int,
+                         engine_procs: int, pipelined: bool = False) -> float:
+    """Modeled cost of ONE chunk of a §3.2 stream: the fixed per-message
+    latency plus the chunk's wire time, discounted by
+    :data:`PIPELINE_FRACTION` when its send overlaps the engine-side
+    re-layout (every chunk of a stream except the last)."""
+    wire = socket_transfer_seconds(chunk_nbytes, client_procs, engine_procs)
+    if pipelined:
+        wire *= 1.0 - PIPELINE_FRACTION
+    return CHUNK_LATENCY_S + wire
+
+
+def stream_transfer_seconds_from_chunks(chunk_sizes, client_procs: int,
+                                        engine_procs: int) -> float:
+    """Stream model over the *actual* chunk-size list of a crossing.
+
+    Equals :func:`stream_transfer_seconds` when chunks are uniform, and —
+    by construction — always equals the sum of the per-chunk
+    :func:`stream_chunk_seconds` records the transfer layer logs, so a
+    stream's aggregate record agrees with its per-chunk records even when
+    shard-boundary cuts leave runt chunks.
+    """
+    sizes = list(chunk_sizes)
+    n = len(sizes)
+    return sum(
+        stream_chunk_seconds(c, client_procs, engine_procs,
+                             pipelined=(i < n - 1))
+        for i, c in enumerate(sizes))
 
 
 def spark_cg_iteration_seconds(nodes: int, rows: int, features: int) -> float:
@@ -108,7 +144,11 @@ class TransferRecord:
     ``chunk_index`` in ``[0, num_chunks)`` positions the chunk, ``session``
     names the client session that moved the bytes. ``chunk_index == -1``
     marks a whole-stream *aggregate* record (what ``transfer.to_engine``/
-    ``to_client`` return to the caller; never appended to the log)."""
+    ``to_client`` return to the caller; never appended to the log — with
+    one exception: a content-dedup'd upload produces a single aggregate
+    record with ``dedup=True``, zero ``nbytes`` and zero modeled cost,
+    which IS logged, because that zero-byte crossing is the whole event;
+    ``logical_nbytes`` records what the stream would have moved)."""
     nbytes: int
     direction: str                # "to_engine" | "to_client"
     modeled_socket_s: float
@@ -116,6 +156,8 @@ class TransferRecord:
     session: int = 0
     chunk_index: int = 0
     num_chunks: int = 1
+    dedup: bool = False           # upload short-circuited by content match
+    logical_nbytes: int = 0       # bytes the dedup'd stream did NOT move
 
 
 class TransferLog:
@@ -135,19 +177,46 @@ class TransferLog:
         self._lock = threading.Lock()
 
     def record(self, nbytes: int, direction: str, session: int = 0,
-               chunk_index: int = 0, num_chunks: int = 1) -> TransferRecord:
+               chunk_index: int = 0, num_chunks: int = 1,
+               pipelined=None) -> TransferRecord:
         """Log one crossing (one chunk of a streamed send, or a whole
-        single-shot send) and return the record with its modeled costs."""
+        single-shot send) and return the record with its modeled costs.
+
+        ``pipelined=None`` prices a single-shot send with the plain socket
+        model; a bool marks the record as one chunk of a stream and prices
+        it with :func:`stream_chunk_seconds` (per-message latency, and the
+        pipeline discount when True) — so a stream's per-chunk records sum
+        exactly to its aggregate."""
+        if pipelined is None:
+            socket_s = socket_transfer_seconds(
+                nbytes, self.client_procs, self.engine_procs)
+        else:
+            socket_s = stream_chunk_seconds(
+                nbytes, self.client_procs, self.engine_procs,
+                pipelined=pipelined)
         rec = TransferRecord(
             nbytes=int(nbytes),
             direction=direction,
-            modeled_socket_s=socket_transfer_seconds(
-                nbytes, self.client_procs, self.engine_procs),
+            modeled_socket_s=socket_s,
             modeled_reshard_s=reshard_transfer_seconds(nbytes, self.chips),
             session=session,
             chunk_index=chunk_index,
             num_chunks=num_chunks,
         )
+        with self._lock:
+            self.records.append(rec)
+        return rec
+
+    def record_dedup(self, logical_nbytes: int, direction: str,
+                     session: int = 0, num_chunks: int = 1) -> TransferRecord:
+        """Log a content-dedup'd upload: the stream short-circuited to a
+        handle alias, so zero bytes and zero modeled seconds actually
+        crossed; ``logical_nbytes`` is what the stream would have moved."""
+        rec = TransferRecord(
+            nbytes=0, direction=direction, modeled_socket_s=0.0,
+            modeled_reshard_s=0.0, session=session, chunk_index=-1,
+            num_chunks=num_chunks, dedup=True,
+            logical_nbytes=int(logical_nbytes))
         with self._lock:
             self.records.append(rec)
         return rec
@@ -175,7 +244,13 @@ class TransferLog:
         for direction in ("to_engine", "to_client"):
             sub = [r for r in recs if r.direction == direction]
             out[f"{direction}_bytes"] = sum(r.nbytes for r in sub)
-            out[f"{direction}_chunks"] = len(sub)
+            # a dedup pseudo-record (chunk_index=-1) moved nothing and is
+            # counted under dedup_uploads, not as a stream chunk
+            out[f"{direction}_chunks"] = sum(
+                1 for r in sub if not r.dedup)
+        out["dedup_uploads"] = sum(1 for r in recs if r.dedup)
+        out["dedup_bytes_saved"] = sum(
+            r.logical_nbytes for r in recs if r.dedup)
         return out
 
 
@@ -242,6 +317,75 @@ class TaskLog:
             "p50_latency_s": percentile(lat, 50),
             "p99_latency_s": percentile(lat, 99),
         }
+
+    def sessions(self) -> list[int]:
+        with self._lock:
+            return sorted({r.session for r in self.records})
+
+
+@dataclasses.dataclass
+class CacheRecord:
+    """One cache event on the bridge's amortization layer.
+
+    ``event`` is ``"hit"`` (memoized result served), ``"miss"`` (computed
+    and stored), ``"dedup"`` (upload short-circuited by content match) or
+    ``"invalidate"`` (entry dropped by an overwrite/reclaim). ``saved_s``
+    is the execute time a hit avoided (the original run's ``exec_s``);
+    ``bytes_saved`` the payload a dedup never moved."""
+    session: int
+    label: str                    # "library.routine" | "transfer.to_engine"
+    event: str                    # hit | miss | dedup | invalidate
+    saved_s: float = 0.0
+    bytes_saved: int = 0
+
+
+class CacheLog:
+    """Per-session cache accounting — the observability half of the
+    content-addressed cache (see ``core/cache.py``). Where TaskLog shows
+    what tenants *paid* (wait vs execute), this log shows what the cache
+    let them *not pay*: avoided execute seconds and avoided bridge bytes,
+    the two costs the paper's amortization argument (§3.2) is about."""
+
+    def __init__(self):
+        self.records: list[CacheRecord] = []
+        self._lock = threading.Lock()
+
+    def record(self, session: int, label: str, event: str,
+               saved_s: float = 0.0, bytes_saved: int = 0) -> CacheRecord:
+        rec = CacheRecord(session=session, label=label, event=event,
+                          saved_s=saved_s, bytes_saved=int(bytes_saved))
+        with self._lock:
+            self.records.append(rec)
+        return rec
+
+    @staticmethod
+    def _summarize(recs: list[CacheRecord]) -> dict:
+        hits = sum(1 for r in recs if r.event == "hit")
+        misses = sum(1 for r in recs if r.event == "miss")
+        return {
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+            "dedup_uploads": sum(1 for r in recs if r.event == "dedup"),
+            "invalidations": sum(1 for r in recs
+                                 if r.event == "invalidate"),
+            "saved_s": sum(r.saved_s for r in recs),
+            "bytes_saved": sum(r.bytes_saved for r in recs),
+        }
+
+    def session_summary(self, session: int) -> dict:
+        """Hit/miss/dedup counts, hit rate, and saved seconds/bytes for
+        one client session — what the multi-tenant cache benchmark charges
+        (or rather, credits) each tenant."""
+        with self._lock:
+            recs = [r for r in self.records if r.session == session]
+        return {"session": session, **self._summarize(recs)}
+
+    def summary(self) -> dict:
+        """Engine-wide totals across every session."""
+        with self._lock:
+            recs = list(self.records)
+        return self._summarize(recs)
 
     def sessions(self) -> list[int]:
         with self._lock:

@@ -16,12 +16,22 @@ The engine owns
   hazards, and deferred-output data dependencies are enforced as
   dependency edges. ``run`` (submit+wait) keeps the blocking call
   semantics; ``submit``/``task_op`` expose the async path;
-* a *handle lifecycle layer* — refcounted entries under an optional engine
-  memory budget, with LRU spill-to-host eviction and transparent reload on
+* a *handle lifecycle layer* — session-owned handle *bindings* over
+  refcounted *stores* (the arrays themselves), under an optional engine
+  memory budget with LRU spill-to-host eviction and transparent reload on
   next use (the engine-side answer to the paper's observation that matrices
   must stay resident across chained calls, §3.3.2, without unbounded
   growth), plus ``free_session`` reclaiming everything a disconnected
-  client left behind.
+  client left behind. Two bindings may alias one store — how dedup'd
+  uploads and cross-session cache hits share content without copying;
+* a *content-addressed cache* (``core/cache.py``) — every store carries a
+  fingerprint (content hash for streamed uploads, derived hash for
+  memoized routine outputs); a submitted command whose
+  (library, routine, params, input fingerprints) key was already computed
+  returns its cached output handles instantly (DONE-on-submit fast path,
+  guarded against in-flight writers), and a re-upload of resident content
+  short-circuits to a handle alias. ``cache_log`` carries the per-session
+  hit/miss/bytes-saved accounting.
 
 On this CPU container the worker mesh is however many devices exist (1);
 the same code lowers onto a real multi-chip engine mesh unchanged — the
@@ -41,8 +51,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import protocol, scheduler as scheduling
-from repro.core.costmodel import TaskLog, TransferLog
+from repro.core import cache as caching, protocol, scheduler as scheduling
+from repro.core.costmodel import CacheLog, TaskLog, TransferLog
 from repro.core.handles import MatrixHandle
 
 SYSTEM_SESSION = 0
@@ -86,21 +96,43 @@ class Session:
 
 
 @dataclasses.dataclass
-class _Entry:
-    """Lifecycle record for one engine-resident matrix.
+class _Store:
+    """One engine-resident matrix (the storage half of a handle).
 
     ``array`` is the live device array, or None while spilled (then
     ``host`` holds the row-major host copy and ``sharding`` remembers how
-    to device_put it back). ``refs`` is the handle refcount; the entry is
-    reclaimed when it reaches zero. ``last_use`` is the engine's logical
-    clock value at the most recent touch (LRU order)."""
+    to device_put it back). ``refs`` counts the *bindings* (handles)
+    referencing this storage — aliases minted by transfer dedup or
+    cross-session cache hits share one store; it is reclaimed when the
+    last binding goes. ``last_use`` is the engine's logical clock value at
+    the most recent touch (LRU order). ``fingerprint`` is the store's
+    content address (see ``core/cache.py`` for the ``v:``/``c:``/``r:``
+    namespaces); it changes on every overwrite, which is what makes
+    fingerprint-derived cache keys self-invalidating."""
     array: Optional[jax.Array]
     nbytes: int
-    session: int
+    shape: tuple
+    dtype: str
+    fingerprint: str
     refs: int = 1
     last_use: int = 0
     host: Optional[np.ndarray] = None
     sharding: Any = None
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One handle *binding*: the session-owned name of a store.
+
+    ``refs`` is the handle refcount (``put``/``alias`` = 1, ``retain`` /
+    ``free``); the binding is reclaimed at zero, dropping one store
+    reference. The content-addressed cache takes a reference on every
+    output handle it memoizes, so a client ``free`` cannot invalidate a
+    live cache entry — forced reclaim (``free_session``) can, and then
+    the cache entry is invalidated rather than left dangling."""
+    store: int
+    session: int
+    refs: int = 1
 
 
 class SessionView:
@@ -154,15 +186,25 @@ class AlchemistEngine:
     def __init__(self, mesh: Optional[Mesh] = None,
                  transfer_log: Optional[TransferLog] = None,
                  memory_budget_bytes: Optional[int] = None,
-                 scheduler_workers: int = 4):
+                 scheduler_workers: int = 4,
+                 cache_entries: int = 256):
         self.mesh = mesh if mesh is not None else make_engine_mesh()
         self.num_workers = self.mesh.devices.size
         self.memory_budget_bytes = memory_budget_bytes
         self._entries: dict[int, _Entry] = {}
+        self._stores: dict[int, _Store] = {}
+        self._store_ids = itertools.count(1)
+        self._by_fingerprint: dict[str, int] = {}
         self._libraries: dict[str, dict[str, Any]] = {}
         self.transfer_log = transfer_log or TransferLog(
             engine_procs=self.num_workers)
         self.task_log = TaskLog()
+        # the content-addressed routine cache (0 entries disables
+        # memoization; the transfer-dedup fingerprint index stays on —
+        # it costs nothing and only ever avoids crossings)
+        self.cache = caching.RoutineCache(cache_entries) \
+            if cache_entries else None
+        self.cache_log = CacheLog()
         # Session 0 is the always-present system namespace: in-process
         # callers (engine-side services, the trainer) that bypass the
         # protocol operate in it.
@@ -195,15 +237,18 @@ class AlchemistEngine:
         self.scheduler.forget_session(session)
 
     def free_session(self, session: int) -> int:
-        """Reclaim every matrix a session owns (regardless of refcount —
-        the client is gone). Returns the number of entries dropped."""
+        """Reclaim every handle binding a session owns (regardless of
+        refcount — the client is gone). Stores aliased by other sessions
+        survive; cache entries whose outputs died here are invalidated.
+        Returns the number of bindings dropped."""
         with self._state_lock:
             sess = self._sessions.get(session)
             if sess is None:
                 return 0
             dropped = 0
             for hid in list(sess.owned):
-                if self._entries.pop(hid, None) is not None:
+                if hid in self._entries:
+                    self._drop_binding(hid)
                     dropped += 1
             sess.owned.clear()
             return dropped
@@ -225,14 +270,16 @@ class AlchemistEngine:
         construct a new one to continue. Idempotent."""
         self.scheduler.shutdown()
         with self._state_lock:
+            if self.cache is not None:
+                self.cache.clear()
             for sid in list(self._sessions):
                 sess = self._sessions[sid]
-                for hid in list(sess.owned):
-                    self._entries.pop(hid, None)
                 sess.owned.clear()
                 if sid != SYSTEM_SESSION:
                     del self._sessions[sid]
             self._entries.clear()
+            self._stores.clear()
+            self._by_fingerprint.clear()
 
     def handshake(self, wire: bytes) -> bytes:
         """Protocol endpoint for connect/disconnect. Returns an encoded
@@ -263,7 +310,12 @@ class AlchemistEngine:
         dynamically dlopen()ing an ALI shared object (§3.1.3). This is the
         trusted in-process path; wire clients go through the
         ``_engine.load_library`` builtin (a scheduler barrier, so loading
-        serializes with every in-flight task)."""
+        serializes with every in-flight task).
+
+        (Re)registration invalidates every cached result of this
+        library's routines: cache keys hash the library *name*, not its
+        code, so a reloaded implementation must never be answered with
+        the old one's memoized outputs."""
         if name == ENGINE_LIBRARY:
             raise ValueError(
                 f"library name {ENGINE_LIBRARY!r} is reserved for engine "
@@ -271,44 +323,63 @@ class AlchemistEngine:
         routines = getattr(module, "ROUTINES", None)
         if not isinstance(routines, dict):
             raise TypeError(f"library {name!r} exports no ROUTINES dict")
-        self._libraries[name] = routines
+        with self._state_lock:
+            self._libraries[name] = routines
+            if self.cache is not None:
+                for entry in self.cache.invalidate_library(name):
+                    self.cache_log.record(entry.session, entry.label,
+                                          "invalidate")
+                    self._release_entry_outputs(entry)
 
     def libraries(self) -> list[str]:
         return sorted(self._libraries)
 
-    # ---- handle lifecycle (refcounts + LRU spill under a budget) ----
+    # ---- handle lifecycle (bindings over refcounted stores) ----
     def put(self, array: jax.Array, name: Optional[str] = None,
-            session: int = SYSTEM_SESSION) -> MatrixHandle:
+            session: int = SYSTEM_SESSION,
+            fingerprint: Optional[str] = None) -> MatrixHandle:
         """Register a device array under a fresh handle owned by
-        ``session`` (refcount 1), evicting LRU entries if over budget."""
+        ``session`` (refcount 1), evicting LRU stores if over budget.
+
+        ``fingerprint`` content-addresses the store (the transfer layer
+        passes the chunk-hash combination so later uploads of equal bytes
+        can alias instead of crossing); ``None`` mints an opaque version
+        — correct, just never dedup'd."""
         with self._state_lock:
             sess = self.session(session)
             handle = MatrixHandle.fresh(array.shape, array.dtype, name=name)
             nbytes = int(np.prod(array.shape)) * array.dtype.itemsize
-            self._entries[handle.id] = _Entry(
-                array=array, nbytes=nbytes, session=session,
+            fp = fingerprint or f"v:{next(self._clock)}"
+            store_id = next(self._store_ids)
+            self._stores[store_id] = _Store(
+                array=array, nbytes=nbytes, shape=tuple(array.shape),
+                dtype=str(array.dtype), fingerprint=fp,
                 last_use=next(self._clock),
                 sharding=getattr(array, "sharding", None))
+            self._by_fingerprint.setdefault(fp, store_id)
+            self._entries[handle.id] = _Entry(store=store_id,
+                                              session=session)
             sess.owned.add(handle.id)
-            self._enforce_budget(keep=handle.id)
+            self._enforce_budget(keep=store_id)
             return handle
 
     def get(self, handle: MatrixHandle, session: Optional[int] = None
             ) -> jax.Array:
         """Resolve a handle to its device array, transparently reloading a
-        spilled entry. ``session=None`` is the trusted in-process path
+        spilled store. ``session=None`` is the trusted in-process path
         (global lookup); a session ID confines resolution to that
         namespace plus the system one (protocol-level isolation)."""
         with self._state_lock:
             entry = self._visible_entry(handle, session)
-            entry.last_use = next(self._clock)
-            if entry.array is None:                     # spilled -> reload
-                entry.array = jax.device_put(
-                    entry.host, entry.sharding) if entry.sharding is not None \
-                    else jax.device_put(entry.host)
-                entry.host = None
-                self._enforce_budget(keep=handle.id)
-            return entry.array
+            store = self._stores[entry.store]
+            store.last_use = next(self._clock)
+            if store.array is None:                     # spilled -> reload
+                store.array = jax.device_put(
+                    store.host, store.sharding) if store.sharding is not None \
+                    else jax.device_put(store.host)
+                store.host = None
+                self._enforce_budget(keep=entry.store)
+            return store.array
 
     def overwrite(self, handle: MatrixHandle, array: jax.Array,
                   session: Optional[int] = None) -> None:
@@ -317,7 +388,13 @@ class AlchemistEngine:
         read/write hazard tracking orders against. Only the owning
         session (or the trusted in-process path) may write a handle; the
         new array must keep the handle's shape/dtype so every outstanding
-        copy of the handle stays truthful."""
+        copy of the handle stays truthful.
+
+        A store shared with aliases (dedup'd uploads, cross-session cache
+        hits) is copied-on-write: the aliases keep the old content, only
+        this binding sees the new array. Either way the binding ends up
+        on a fresh fingerprint and every cache entry touching this handle
+        is invalidated — an overwritten result must never be served."""
         with self._state_lock:
             entry = self._visible_entry(handle, session)
             if session is not None and entry.session != session:
@@ -331,15 +408,35 @@ class AlchemistEngine:
                     f"overwrite of handle #{handle.id} must keep shape "
                     f"{handle.shape} and dtype {handle.dtype}, got "
                     f"{tuple(array.shape)}/{array.dtype}")
-            entry.array = array
-            entry.host = None
-            entry.sharding = getattr(array, "sharding", entry.sharding)
-            entry.last_use = next(self._clock)
-            self._enforce_budget(keep=handle.id)
+            store = self._stores[entry.store]
+            fp = f"v:{next(self._clock)}"
+            if store.refs > 1:                          # copy-on-write
+                store.refs -= 1
+                store_id = next(self._store_ids)
+                self._stores[store_id] = _Store(
+                    array=array, nbytes=store.nbytes,
+                    shape=tuple(array.shape), dtype=str(array.dtype),
+                    fingerprint=fp, last_use=next(self._clock),
+                    sharding=getattr(array, "sharding", None))
+                entry.store = store_id
+                self._enforce_budget(keep=store_id)
+            else:
+                if self._by_fingerprint.get(store.fingerprint) == \
+                        entry.store:
+                    del self._by_fingerprint[store.fingerprint]
+                store.fingerprint = fp
+                store.array = array
+                store.host = None
+                store.sharding = getattr(array, "sharding", store.sharding)
+                store.last_use = next(self._clock)
+                self._enforce_budget(keep=entry.store)
+            self._by_fingerprint.setdefault(fp, entry.store)
+            self._cache_invalidate(handle.id, outputs_only=False)
 
     def free(self, handle: MatrixHandle,
              session: Optional[int] = None) -> None:
-        """Drop one reference; the entry is reclaimed at refcount zero.
+        """Drop one reference; the binding is reclaimed at refcount zero
+        (and its store with it, unless aliases remain).
 
         A session may only free handles it *owns*: system-namespace
         matrices are readable by every session (shared inputs) but
@@ -357,10 +454,7 @@ class AlchemistEngine:
                     "but not free it")
             entry.refs -= 1
             if entry.refs <= 0:
-                self._entries.pop(handle.id, None)
-                owner = self._sessions.get(entry.session)
-                if owner is not None:
-                    owner.owned.discard(handle.id)
+                self._drop_binding(handle.id)
 
     def retain(self, handle: MatrixHandle) -> None:
         """Take an extra reference (e.g. a handle shared across calls)."""
@@ -372,23 +466,47 @@ class AlchemistEngine:
             entry = self._entries.get(handle.id)
             return 0 if entry is None else entry.refs
 
+    def fingerprint(self, handle: MatrixHandle) -> str:
+        """The content fingerprint of the store a handle names."""
+        with self._state_lock:
+            return self._stores[self._entry(handle).store].fingerprint
+
+    def alias_by_fingerprint(self, fingerprint: str, shape, session: int,
+                             name: Optional[str] = None
+                             ) -> Optional[MatrixHandle]:
+        """Mint a new handle in ``session`` aliasing the resident store
+        whose content fingerprint matches, or return None. The transfer
+        layer's dedup path: a re-upload of already-resident content
+        becomes a namespace entry instead of a crossing."""
+        with self._state_lock:
+            store_id = self._by_fingerprint.get(fingerprint)
+            if store_id is None:
+                return None
+            store = self._stores.get(store_id)
+            if store is None or store.shape != tuple(
+                    int(s) for s in shape):
+                return None
+            return self._alias_store(store_id, session, name=name)
+
     def is_spilled(self, handle: MatrixHandle) -> bool:
         """True if the matrix currently lives on host (LRU-evicted)."""
         with self._state_lock:
             entry = self._entries.get(handle.id)
-            return entry is not None and entry.array is None
+            if entry is None:
+                return False
+            return self._stores[entry.store].array is None
 
     def resident_bytes(self) -> int:
         """Bytes of matrix data currently on engine devices."""
         with self._state_lock:
-            return sum(e.nbytes for e in self._entries.values()
-                       if e.array is not None)
+            return sum(s.nbytes for s in self._stores.values()
+                       if s.array is not None)
 
     def spilled_bytes(self) -> int:
         """Bytes of matrix data currently spilled to host."""
         with self._state_lock:
-            return sum(e.nbytes for e in self._entries.values()
-                       if e.array is None)
+            return sum(s.nbytes for s in self._stores.values()
+                       if s.array is None)
 
     def _entry(self, handle: MatrixHandle) -> _Entry:
         entry = self._entries.get(handle.id)
@@ -407,23 +525,224 @@ class AlchemistEngine:
                 f"#{session} (owned by session #{entry.session})")
         return entry
 
+    def _alias_store(self, store_id: int, session: int,
+                     name: Optional[str] = None) -> MatrixHandle:
+        """New binding in ``session`` over an existing store (one more
+        store reference; the alias has its own handle refcount)."""
+        store = self._stores[store_id]
+        sess = self.session(session)
+        handle = MatrixHandle.fresh(store.shape, store.dtype, name=name)
+        store.refs += 1
+        self._entries[handle.id] = _Entry(store=store_id, session=session)
+        sess.owned.add(handle.id)
+        return handle
+
+    def _drop_binding(self, handle_id: int) -> None:
+        """Reclaim one binding unconditionally: detach it from its owner
+        and store (reclaiming the store at zero references), then
+        invalidate any cache entry whose outputs named this handle — its
+        cached values would otherwise dangle."""
+        entry = self._entries.pop(handle_id)
+        owner = self._sessions.get(entry.session)
+        if owner is not None:
+            owner.owned.discard(handle_id)
+        store = self._stores.get(entry.store)
+        if store is not None:
+            store.refs -= 1
+            if store.refs <= 0:
+                del self._stores[entry.store]
+                if self._by_fingerprint.get(store.fingerprint) == \
+                        entry.store:
+                    del self._by_fingerprint[store.fingerprint]
+        self._cache_invalidate(handle_id, outputs_only=True)
+
     def _enforce_budget(self, keep: Optional[int] = None) -> None:
-        """Spill LRU device-resident entries to host until under budget.
-        ``keep`` pins one entry (the one being put/reloaded right now)."""
+        """Spill LRU device-resident stores to host until under budget.
+        ``keep`` pins one store (the one being put/reloaded right now).
+        Spill never touches refcounts or the cache: a spilled store
+        reloads transparently on next use, so memoized results that point
+        at it stay valid."""
         if self.memory_budget_bytes is None:
             return
-        resident = [(e.last_use, hid, e) for hid, e in self._entries.items()
-                    if e.array is not None and hid != keep]
+        resident = [(s.last_use, sid, s) for sid, s in self._stores.items()
+                    if s.array is not None and sid != keep]
         resident.sort()
-        total = sum(e.nbytes for _, _, e in resident)
-        if keep is not None and keep in self._entries:
-            total += self._entries[keep].nbytes
-        for _, hid, entry in resident:
+        total = sum(s.nbytes for _, _, s in resident)
+        if keep is not None and keep in self._stores:
+            total += self._stores[keep].nbytes
+        for _, sid, store in resident:
             if total <= self.memory_budget_bytes:
                 break
-            entry.host = np.asarray(entry.array)
-            entry.array = None
-            total -= entry.nbytes
+            store.host = np.asarray(store.array)
+            store.array = None
+            total -= store.nbytes
+
+    # ---- content-addressed routine memoization (core/cache.py) ----
+    def _cache_invalidate(self, handle_id: int, outputs_only: bool) -> None:
+        """Drop cache entries touching ``handle_id`` and release their
+        retained output references. Runs under the state lock; the
+        release may cascade (freeing an output reclaims its binding,
+        which invalidates further entries) — the cache pops entries
+        before we release, so the recursion terminates."""
+        if self.cache is None:
+            return
+        dropped = self.cache.invalidate_output(handle_id) if outputs_only \
+            else self.cache.invalidate_handle(handle_id)
+        for entry in dropped:
+            self.cache_log.record(entry.session, entry.label, "invalidate")
+            self._release_entry_outputs(entry)
+
+    def _release_entry_outputs(self, entry: caching.CacheEntry) -> None:
+        """Give back the refcounts the cache took on a dead entry's
+        outputs (a handle already reclaimed free()s as a no-op)."""
+        for h in entry.outputs:
+            self.free(h)
+
+    def _cache_info(self, cmd: protocol.Command
+                    ) -> Optional[tuple[str, tuple[int, ...]]]:
+        """Cache key + input-handle IDs for a command, or None when it
+        must not be memoized: engine builtins, unknown routines (they
+        fail on their own), routines declaring ``writes`` (side effects)
+        or ``nocache``, commands with no handle args at all (creation
+        routines and test shims — params alone are no evidence the
+        result is worth pinning), deferred args (submit-time only; by
+        run time they are real handles), or handles this session cannot
+        resolve. Call under the state lock."""
+        if self.cache is None or cmd.library == ENGINE_LIBRARY:
+            return None
+        fn = self._libraries.get(cmd.library, {}).get(cmd.routine)
+        if fn is None or getattr(fn, "writes", None) or \
+                getattr(fn, "nocache", False):
+            return None
+        inputs: list[int] = []
+
+        def fp_of(h: MatrixHandle) -> str:
+            entry = self._entries.get(h.id)
+            if entry is None or entry.session not in (
+                    cmd.session, SYSTEM_SESSION):
+                raise caching.Uncacheable(f"handle #{h.id} unresolvable")
+            inputs.append(h.id)
+            return self._stores[entry.store].fingerprint
+
+        key = caching.routine_key(cmd.library, cmd.routine, cmd.args, fp_of)
+        if key is None or not inputs:
+            return None
+        return key, tuple(inputs)
+
+    def _deliver_cached(self, entry: caching.CacheEntry,
+                        session: int) -> dict:
+        """Materialize a cache entry's values for ``session``: handles
+        owned by the session are re-delivered with one extra reference
+        (so the client's eventual free balances, hit or miss); handles
+        owned by another session are *aliased* into this namespace —
+        session A's cached result never leaks A's handle IDs into B's
+        namespace, B gets its own bindings over the shared stores."""
+        def rebind(v):
+            if isinstance(v, MatrixHandle):
+                binding = self._entry(v)
+                if binding.session == session:
+                    binding.refs += 1
+                    return v
+                return self._alias_store(binding.store, session,
+                                         name=v.name)
+            if isinstance(v, dict):
+                return {k: rebind(x) for k, x in v.items()}
+            if isinstance(v, list):
+                return [rebind(x) for x in v]
+            if isinstance(v, tuple):
+                return tuple(rebind(x) for x in v)
+            return v
+
+        return rebind(entry.values)
+
+    def _serve_hit(self, key: str, entry: caching.CacheEntry,
+                   cmd: protocol.Command, state: str = "") -> protocol.Result:
+        """Deliver one cache hit (call under the state lock): rebind the
+        memoized values into the requesting session, account it, touch
+        the entry's LRU position. Shared by the submit fast path and the
+        dispatch-time lookup so the two hit paths cannot diverge."""
+        self.cache.peek(key)                 # LRU/hit-count touch
+        values = self._deliver_cached(entry, cmd.session)
+        self.cache_log.record(cmd.session, f"{cmd.library}.{cmd.routine}",
+                              "hit", saved_s=entry.exec_s)
+        self._sessions[cmd.session].commands += 1
+        return protocol.Result(values=values, session=cmd.session,
+                               state=state, cache_hit=True,
+                               saved_s=entry.exec_s)
+
+    def _cache_fast_path(self, cmd: protocol.Command) -> Optional[bytes]:
+        """DONE-on-submit: serve a memoized result without minting a task.
+
+        Guarded against the scheduler's hazard edges: a hit is refused
+        while any input or cached-output handle has a QUEUED/RUNNING
+        writer, and while a barrier (library loading — which may
+        invalidate this very entry) is in flight — the task path would
+        have ordered this command after those, so the fast path must not
+        run ahead of them (it falls through to normal scheduling, and
+        the dispatch-time lookup re-checks once the edges drained)."""
+        with self._state_lock:
+            info = self._cache_info(cmd)
+            if info is None:
+                return None
+            key, inputs = info
+            entry = self.cache.get(key)      # non-touching: may refuse
+            if entry is None:
+                return None
+            guard = set(inputs) | {h.id for h in entry.outputs}
+            if self.scheduler.pending_writers(guard) or \
+                    self.scheduler.pending_barrier():
+                return None
+            return protocol.encode_result(
+                self._serve_hit(key, entry, cmd, state=scheduling.DONE))
+
+    def _cache_store_result(self, key: str, inputs: tuple[int, ...],
+                            cmd: protocol.Command, values: dict,
+                            exec_s: float) -> None:
+        """Memoize a freshly computed result: retain every output handle
+        (a client free or LRU spill must not invalidate the entry),
+        rebind the outputs' stores onto *derived* fingerprints (equal
+        computations mint equal fingerprints, so memoization composes
+        transitively), and record the miss. LRU-evicted entries give
+        their retained references back."""
+        label = f"{cmd.library}.{cmd.routine}"
+        with self._state_lock:
+            self.cache_log.record(cmd.session, label, "miss")
+            if key in self.cache:
+                return          # raced by a concurrent identical task
+            outputs: list[tuple[str, MatrixHandle]] = []
+
+            def walk(path, v):
+                if isinstance(v, MatrixHandle):
+                    outputs.append((path, v))
+                elif isinstance(v, dict):
+                    for k in sorted(v, key=str):
+                        walk(f"{path}.{k}", v[k])
+                elif isinstance(v, (list, tuple)):
+                    for i, x in enumerate(v):
+                        walk(f"{path}[{i}]", x)
+
+            walk("", values)
+            if any(h.id not in self._entries for _, h in outputs):
+                return          # an output was already freed: not cacheable
+            for path, h in outputs:
+                binding = self._entries[h.id]
+                binding.refs += 1
+                store = self._stores[binding.store]
+                if store.fingerprint.startswith("v:"):
+                    # opaque version -> derived content address (leave
+                    # streamed-content and already-derived prints alone)
+                    if self._by_fingerprint.get(store.fingerprint) == \
+                            binding.store:
+                        del self._by_fingerprint[store.fingerprint]
+                    store.fingerprint = caching.derived_fingerprint(
+                        key, path)
+                    self._by_fingerprint.setdefault(store.fingerprint,
+                                                    binding.store)
+            evicted = self.cache.store(
+                key, values, [h for _, h in outputs], inputs,
+                exec_s=exec_s, label=label, session=cmd.session)
+            for old in evicted:
+                self._release_entry_outputs(old)
 
     # ---- 2D engine layout (Elemental DistMatrix analogue) ----
     def dist_sharding(self, shape) -> NamedSharding:
@@ -444,11 +763,16 @@ class AlchemistEngine:
         session's earlier tasks and any handle hazards, and the call
         blocks until it reaches a terminal state. Concurrent clients'
         independent commands overlap on the worker pool instead of
-        head-of-line blocking each other.
+        head-of-line blocking each other. A routine-cache hit returns at
+        submit time (``cache_hit`` set, no task minted) with nothing to
+        wait for.
         """
-        sub = protocol.decode_result(self.submit(wire_command))
+        wire_sub = self.submit(wire_command)
+        sub = protocol.decode_result(wire_sub)
         if sub.error:
             return protocol.encode_result(sub)
+        if sub.cache_hit:
+            return wire_sub
         return self.wait_task(sub.task, session=sub.session)
 
     def submit(self, wire_command: bytes) -> bytes:
@@ -458,6 +782,11 @@ class AlchemistEngine:
         undecodable bytes, the system session, or an unknown session;
         library/routine existence is checked at *execution* time so a
         submitted ``_engine.load_library`` can satisfy later submissions.
+
+        A command whose routine-cache key hits (and whose handles have no
+        in-flight writer) takes the DONE-on-submit fast path: the reply
+        carries the memoized values with ``cache_hit=True``, ``task=0``,
+        and no task is ever minted.
         """
         try:
             cmd = protocol.decode_command(wire_command)
@@ -493,6 +822,10 @@ class AlchemistEngine:
                     values={}, error=f"KeyError: task #{dep} does not "
                     f"belong to session #{cmd.session}",
                     session=cmd.session))
+        if not data_deps and not writes and self.cache is not None:
+            fast = self._cache_fast_path(cmd)
+            if fast is not None:
+                return fast
         barrier = cmd.library == ENGINE_LIBRARY
         try:
             task = self.scheduler.submit(
@@ -613,11 +946,18 @@ class AlchemistEngine:
 
     def _run_task(self, cmd: protocol.Command) -> bytes:
         """Task body run on a scheduler worker: resolve deferred args,
-        dispatch the routine, encode the Result. A total exception
-        barrier converts every failure (unresolvable deferred, routine
-        raising, unserializable outputs) into an encoded error Result
-        raised as TaskFailure, so the task lands in FAILED with the error
-        available to waiters — and the worker pool survives."""
+        consult the routine cache, dispatch the routine, memoize and
+        encode the Result. A total exception barrier converts every
+        failure (unresolvable deferred, routine raising, unserializable
+        outputs) into an encoded error Result raised as TaskFailure, so
+        the task lands in FAILED with the error available to waiters —
+        and the worker pool survives.
+
+        The cache lookup here needs no hazard guard: by dispatch time
+        every write this task was ordered after has completed (its edges
+        drained), so input fingerprints — and therefore the key — already
+        reflect those writes. This is also what catches hits the submit
+        fast path had to refuse while a writer was in flight."""
         try:
             cmd = self._resolve_deferred(cmd)
             sess = self.session(cmd.session)
@@ -635,11 +975,23 @@ class AlchemistEngine:
                 if fn is None:
                     raise LibraryNotRegistered(
                         f"routine {cmd.routine!r} not in {cmd.library!r}")
+            info = None
+            if self.cache is not None:
+                with self._state_lock:
+                    info = self._cache_info(cmd)
+                    if info is not None:
+                        entry = self.cache.get(info[0])
+                        if entry is not None:
+                            return protocol.encode_result(
+                                self._serve_hit(info[0], entry, cmd))
             sess.commands += 1
             view = SessionView(self, sess)
             t0 = time.perf_counter()
             values = fn(view, **cmd.args)
             elapsed = time.perf_counter() - t0
+            if info is not None:
+                self._cache_store_result(info[0], info[1], cmd, values,
+                                         elapsed)
             return protocol.encode_result(protocol.Result(
                 values=values, elapsed=elapsed, session=cmd.session))
         except LibraryNotRegistered as e:

@@ -12,8 +12,12 @@ a handle is unambiguous engine-wide, while *visibility* is a session
 property — the engine's session table says which namespace owns each ID,
 and protocol-level resolution is confined to the issuing session (see
 ``engine.Session``). Lifecycle state (refcount, LRU position, spilled-to-
-host status) lives engine-side in the entry the ID names, never in the
-handle, so handles can be freely copied across the wire.
+host status, content fingerprint) lives engine-side in the binding/store
+the ID names, never in the handle, so handles can be freely copied across
+the wire. Two distinct handles may *alias* one underlying store: the
+content-addressed cache (``core/cache.py``) mints an alias instead of
+re-crossing or recomputing when a session uploads or requests content the
+engine already holds.
 """
 from __future__ import annotations
 
@@ -45,7 +49,13 @@ class MatrixHandle:
         return n
 
     @property
-    def nbytes(self) -> int:
+    def itemsize(self) -> int:
+        """Bytes per element of this handle's dtype (never assume 8 —
+        float32 matrices are half that, see the transfer layer)."""
         import numpy as np
 
-        return self.num_elements * np.dtype(self.dtype).itemsize
+        return np.dtype(self.dtype).itemsize
+
+    @property
+    def nbytes(self) -> int:
+        return self.num_elements * self.itemsize

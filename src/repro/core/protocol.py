@@ -109,6 +109,13 @@ class Result:
     latency split: ``wait_s`` queued behind dependencies and worker
     availability, ``exec_s`` actually executing (``elapsed`` keeps the
     legacy meaning: routine execution time).
+
+    ``cache_hit=True`` marks a result served from the engine's
+    content-addressed routine cache instead of being computed; ``saved_s``
+    then reports the original run's execute time — what this client did
+    not wait for. A cache hit at *submit* time comes back with
+    ``state="DONE"`` and ``task=0``: no task was ever minted (the
+    DONE-on-submit fast path).
     """
     values: dict[str, Any]
     elapsed: float = 0.0
@@ -118,6 +125,8 @@ class Result:
     state: str = ""
     wait_s: float = 0.0
     exec_s: float = 0.0
+    cache_hit: bool = False
+    saved_s: float = 0.0
 
 
 def _pack_value(v):
@@ -222,6 +231,8 @@ def encode_result(res: Result) -> bytes:
         "state": res.state,
         "wait_s": res.wait_s,
         "exec_s": res.exec_s,
+        "cache_hit": res.cache_hit,
+        "saved_s": res.saved_s,
     })
 
 
@@ -232,4 +243,6 @@ def decode_result(data: bytes) -> Result:
     return Result(values=_unpack_value(d["values"]), elapsed=d["elapsed"],
                   error=d["error"], session=d.get("session", 0),
                   task=d.get("task", 0), state=d.get("state", ""),
-                  wait_s=d.get("wait_s", 0.0), exec_s=d.get("exec_s", 0.0))
+                  wait_s=d.get("wait_s", 0.0), exec_s=d.get("exec_s", 0.0),
+                  cache_hit=d.get("cache_hit", False),
+                  saved_s=d.get("saved_s", 0.0))

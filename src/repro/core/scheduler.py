@@ -236,6 +236,31 @@ class TaskScheduler:
         with self._cv:
             return self._running
 
+    def pending_writers(self, handles: Iterable[int]) -> bool:
+        """True if any of the given engine-handle IDs has a QUEUED/RUNNING
+        *writer* task. The engine's cache fast path checks this before
+        serving a memoized result at submit time: hazard edges only order
+        scheduled tasks, and a DONE-on-submit hit bypasses scheduling —
+        so a hit must never be served while a write it would have been
+        ordered after is still in flight."""
+        with self._cv:
+            for h in handles:
+                t = self._tasks.get(self._writer.get(h, -1))
+                if t is not None and t.state in (QUEUED, RUNNING):
+                    return True
+        return False
+
+    def pending_barrier(self) -> bool:
+        """True while a barrier task (library loading) is QUEUED/RUNNING.
+        The cache fast path refuses hits then, for the same reason as
+        :meth:`pending_writers`: a barrier submitted earlier must take
+        effect (e.g. re-registering a library invalidates its memoized
+        results) before any later command is served."""
+        with self._cv:
+            t = self._tasks.get(self._barrier_tail) \
+                if self._barrier_tail is not None else None
+            return t is not None and t.state in (QUEUED, RUNNING)
+
     # ---- waiting --------------------------------------------------------
     def wait(self, task_id: int, timeout: Optional[float] = None) -> Task:
         """Block until the task reaches DONE or FAILED; returns it."""

@@ -13,6 +13,33 @@ row range, and each chunk logs its own
 ``benchmarks/table3_transfer.py``'s chunk-size sweep — sees the same
 per-message structure the real sockets have.
 
+Chunk sizing and the cost models use the *source's actual dtype*
+(``RowMatrix.dtype`` is tracked client-side exactly for this): a float32
+matrix has half the row-bytes of a float64 one, so assuming 8-byte
+elements — as this layer once did — doubles chunk sizes and doubles the
+modeled socket cost.
+
+**Upload dedup** (``dedup=True``, the default): the matrix's bytes are
+digested in row-major order (chunk-boundary invariant — the same bytes
+dedup whatever ``chunk_rows`` carried them) and the fingerprint is looked
+up in the engine's store index. A re-upload of already-resident content —
+the repeated-tenant case of the Cray deployment report — never streams:
+the engine mints a handle *alias* over the existing store, and the log
+records a zero-byte, zero-second crossing (``TransferRecord.dedup``) with
+the avoided payload in ``logical_nbytes``.
+
+The pre-stream hash pass walks the source once more than a plain upload —
+cheap for ndarrays (slices are views) and *cached* RowMatrix RDDs
+(partitions memoized), which is when it runs. An **uncached** RDD source
+(e.g. a bare ``map_rows``) is consumed exactly once: re-iterating it
+would recompute every partition, and a nondeterministic lineage need not
+even reproduce the bytes the fingerprint was built from — so such uploads
+skip the pre-stream lookup and hash inline *during* streaming instead:
+the registered fingerprint always matches the bytes that actually
+crossed, and later uploads of equal content still dedup against it. Pass
+``dedup=False`` to skip hashing entirely (the Table-3 bandwidth sweep
+does).
+
 On a TPU system both "sides" are device meshes, so the socket send becomes
 an explicit re-layout; the cost model records what the same movement would
 cost over the paper's sockets and over ICI/DCN, feeding the EXPERIMENTS
@@ -21,16 +48,17 @@ transfer tables.
 from __future__ import annotations
 
 import bisect
-from typing import Any, Iterator, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import cache as caching
 from repro.core.costmodel import (
     TransferRecord,
     reshard_transfer_seconds,
-    stream_transfer_seconds,
+    stream_transfer_seconds_from_chunks,
 )
 from repro.core.engine import SYSTEM_SESSION, AlchemistEngine
 from repro.core.handles import MatrixHandle
@@ -44,7 +72,9 @@ DEFAULT_CHUNK_BYTES = 4 << 20
 
 def chunk_rows_for(shape, itemsize: int,
                    chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> int:
-    """Rows per chunk so a chunk is ~``chunk_bytes`` (at least one row)."""
+    """Rows per chunk so a chunk is ~``chunk_bytes`` (at least one row).
+    ``itemsize`` must be the source's real element size — see the float32
+    note in the module docstring."""
     row_bytes = max(1, int(np.prod(shape[1:])) * itemsize)
     return max(1, chunk_bytes // row_bytes)
 
@@ -76,25 +106,28 @@ def _device_row_ranges(sharding, shape) -> list[tuple[int, int, Any]]:
 
 
 def _aggregate_record(log, nbytes: int, direction: str, session: int,
-                      num_chunks: int, chunk_bytes: int) -> TransferRecord:
+                      chunk_sizes: list[int]) -> TransferRecord:
     """Whole-stream summary record (returned to the caller, NOT logged —
     the log carries the per-chunk records). ``chunk_index=-1`` marks it as
-    an aggregate; its socket model is the chunked stream model."""
+    an aggregate. Modeled from the stream's *actual* chunk-size list, so
+    it equals the sum of the per-chunk records by construction — a mean
+    chunk size would disagree whenever shard-boundary cuts leave runts."""
     return TransferRecord(
         nbytes=int(nbytes),
         direction=direction,
-        modeled_socket_s=stream_transfer_seconds(
-            nbytes, chunk_bytes, log.client_procs, log.engine_procs),
+        modeled_socket_s=stream_transfer_seconds_from_chunks(
+            chunk_sizes, log.client_procs, log.engine_procs),
         modeled_reshard_s=reshard_transfer_seconds(nbytes, log.chips),
         session=session,
         chunk_index=-1,
-        num_chunks=num_chunks,
+        num_chunks=len(chunk_sizes),
     )
 
 
 def to_engine(engine: AlchemistEngine, matrix, name: Optional[str] = None,
               session: int = SYSTEM_SESSION,
-              chunk_rows: Optional[int] = None
+              chunk_rows: Optional[int] = None,
+              dedup: bool = True
               ) -> tuple[MatrixHandle, TransferRecord]:
     """Stream a client matrix into the engine in row-block chunks (§3.2).
 
@@ -104,7 +137,12 @@ def to_engine(engine: AlchemistEngine, matrix, name: Optional[str] = None,
     shard boundaries); each is ``device_put`` onto the engine device
     owning its row range and logged as its own TransferRecord tagged with
     ``session`` and its chunk index. ``chunk_rows=None`` picks rows so a
-    chunk is ~``DEFAULT_CHUNK_BYTES``.
+    chunk is ~``DEFAULT_CHUNK_BYTES`` — sized by the source's actual
+    dtype, never an assumed float64.
+
+    With ``dedup`` (default), the chunks are content-hashed first and a
+    re-upload of already-resident content short-circuits to a handle
+    alias with a zero-byte logged crossing (see module docstring).
 
     Returns ``(handle, aggregate record)`` — the record summarizes the
     whole stream (total bytes, chunk count, stream-modeled socket cost);
@@ -113,7 +151,7 @@ def to_engine(engine: AlchemistEngine, matrix, name: Optional[str] = None,
     A ``jax.Array`` input is already device-resident (an engine-side
     service handing over data, not a socket crossing) and takes the
     direct re-layout path: one ``device_put``, one record, no host
-    round trip.
+    round trip (and no content hashing).
     """
     if isinstance(matrix, jax.Array):
         arr = jax.device_put(matrix, engine.dist_sharding(matrix.shape))
@@ -124,12 +162,13 @@ def to_engine(engine: AlchemistEngine, matrix, name: Optional[str] = None,
     is_rm = isinstance(matrix, RowMatrix)
     if is_rm:
         shape = matrix.shape
-        itemsize = 8          # chunk-sizing heuristic only (np f64 rows)
+        dtype = matrix.dtype      # lazily derived from partition 0
         src = None
     else:
         src = np.asarray(matrix)
         shape = src.shape
-        itemsize = src.dtype.itemsize
+        dtype = src.dtype
+    itemsize = dtype.itemsize
 
     if len(shape) < 1 or shape[0] == 0:
         arr = jnp.asarray(matrix.collect() if is_rm else src)
@@ -156,20 +195,60 @@ def to_engine(engine: AlchemistEngine, matrix, name: Optional[str] = None,
     plan = _row_plan(shape[0], chunk_rows, boundaries)
     num_chunks = len(plan)
 
-    chunks: Iterator[np.ndarray]
-    if is_rm:
-        chunks = matrix.iter_sized_row_blocks([hi - lo for lo, hi in plan])
-    else:
-        chunks = (src[lo:hi] for lo, hi in plan)
+    def chunk_stream():
+        if is_rm:
+            return matrix.iter_sized_row_blocks(
+                [hi - lo for lo, hi in plan])
+        return (src[lo:hi] for lo, hi in plan)
+
+    # Pre-stream dedup lookup only for sources that are cheap AND safe to
+    # iterate twice; uncached RDD lineages hash inline during streaming
+    # (see module docstring).
+    fingerprint = None
+    inline_hasher = None
+    if dedup and (not is_rm or matrix.rdd.cached):
+        # hash pass: cheap client-side digest before paying the bridge.
+        # The fingerprint is chunk-boundary invariant, so digest the raw
+        # memoized partitions directly (no re-running the chunk plan's
+        # cross-partition concatenation); an ndarray is digested in
+        # row-slice pieces — views for C-order sources, and for strided
+        # ones at most a chunk-sized copy at a time, never a whole-matrix
+        # staging buffer.
+        hasher = caching.ContentHasher(shape, dtype)
+        logical = 0
+        pieces = (matrix.rdd.partition(i)
+                  for i in range(matrix.rdd.num_partitions)) \
+            if is_rm else (src[lo:hi] for lo, hi in plan)
+        for piece in pieces:
+            piece = np.asarray(piece)
+            hasher.update(piece)
+            logical += piece.nbytes
+        fingerprint = hasher.fingerprint()
+        alias = engine.alias_by_fingerprint(fingerprint, shape,
+                                           session=session, name=name)
+        if alias is not None:
+            rec = engine.transfer_log.record_dedup(
+                logical, "to_engine", session=session,
+                num_chunks=num_chunks)
+            engine.cache_log.record(session, "transfer.to_engine",
+                                    "dedup", bytes_saved=logical)
+            return alias, rec
+    elif dedup:
+        inline_hasher = caching.ContentHasher(shape, dtype)
 
     per_range: list[list[jax.Array]] = [[] for _ in ranges]
+    sizes: list[int] = []
     total = 0
-    for idx, ((lo, hi), chunk) in enumerate(zip(plan, chunks)):
+    for idx, ((lo, hi), chunk) in enumerate(zip(plan, chunk_stream())):
         chunk = np.ascontiguousarray(chunk)
+        if inline_hasher is not None:
+            inline_hasher.update(chunk)
         total += chunk.nbytes
+        sizes.append(chunk.nbytes)
         engine.transfer_log.record(
             chunk.nbytes, "to_engine", session=session,
-            chunk_index=idx, num_chunks=num_chunks)
+            chunk_index=idx, num_chunks=num_chunks,
+            pipelined=(idx < num_chunks - 1))
         r = bisect.bisect_right(starts, lo) - 1 if partitioned else 0
         per_range[r].append(jax.device_put(chunk, ranges[r][2]))
 
@@ -180,10 +259,12 @@ def to_engine(engine: AlchemistEngine, matrix, name: Optional[str] = None,
             tuple(shape), sharding, shards)
     else:
         arr = jax.device_put(shards[0], sharding)
+    if inline_hasher is not None:
+        fingerprint = inline_hasher.fingerprint()
     rec = _aggregate_record(
-        engine.transfer_log, total, "to_engine", session, num_chunks,
-        max(1, total // num_chunks))
-    return engine.put(arr, name=name, session=session), rec
+        engine.transfer_log, total, "to_engine", session, sizes)
+    return engine.put(arr, name=name, session=session,
+                      fingerprint=fingerprint), rec
 
 
 def to_client(engine: AlchemistEngine, handle: MatrixHandle,
@@ -196,6 +277,12 @@ def to_client(engine: AlchemistEngine, handle: MatrixHandle,
     The fetch crosses in row-block chunks, one TransferRecord per chunk
     plus an aggregate record returned to the caller; ``session`` applies
     the same namespace check as routine dispatch.
+
+    Chunks land *directly in the per-partition blocks* backing the
+    returned RowMatrix (the chunk plan is additionally cut at partition
+    boundaries so no chunk straddles two blocks): beyond the result's own
+    storage, peak host allocation is one chunk — never a whole-matrix
+    staging buffer.
     """
     arr = engine.get(handle, session=session)
     sess = SYSTEM_SESSION if session is None else session
@@ -207,17 +294,33 @@ def to_client(engine: AlchemistEngine, handle: MatrixHandle,
     if chunk_rows is None:
         chunk_rows = chunk_rows_for(arr.shape, arr.dtype.itemsize)
     chunk_rows = max(1, int(chunk_rows))
-    plan = _row_plan(arr.shape[0], chunk_rows, [])
-    out = np.empty(arr.shape, dtype=arr.dtype)
+    rows = arr.shape[0]
+    num_partitions = max(1, min(num_partitions, rows))
+    # partition bounds exactly as np.array_split (what from_array used):
+    # the first rows % P partitions carry one extra row
+    base, extra = divmod(rows, num_partitions)
+    psizes = [base + (1 if i < extra else 0) for i in range(num_partitions)]
+    pstarts = [0]
+    for s in psizes:
+        pstarts.append(pstarts[-1] + s)
+
+    plan = _row_plan(rows, chunk_rows, pstarts[1:-1])
+    blocks: list[Optional[np.ndarray]] = [None] * num_partitions
+    sizes: list[int] = []
     total = 0
     for idx, (lo, hi) in enumerate(plan):
         block = np.asarray(arr[lo:hi])
-        out[lo:hi] = block
+        p = bisect.bisect_right(pstarts, lo) - 1
+        if blocks[p] is None:
+            blocks[p] = np.empty((psizes[p],) + tuple(arr.shape[1:]),
+                                 dtype=arr.dtype)
+        blocks[p][lo - pstarts[p]: hi - pstarts[p]] = block
         total += block.nbytes
+        sizes.append(block.nbytes)
         engine.transfer_log.record(
             block.nbytes, "to_client", session=sess,
-            chunk_index=idx, num_chunks=len(plan))
+            chunk_index=idx, num_chunks=len(plan),
+            pipelined=(idx < len(plan) - 1))
     rec = _aggregate_record(
-        engine.transfer_log, total, "to_client", sess, len(plan),
-        max(1, total // len(plan)))
-    return RowMatrix.from_array(out, num_partitions), rec
+        engine.transfer_log, total, "to_client", sess, sizes)
+    return RowMatrix.from_blocks(blocks), rec

@@ -69,6 +69,15 @@ class RDD:
         self._cached = True
         return self
 
+    @property
+    def cached(self) -> bool:
+        """True if partitions are memoized on first compute. Consumers
+        that would otherwise iterate the data twice (e.g. the transfer
+        layer's dedup hash pass) check this: re-iterating an *uncached*
+        RDD recomputes every partition — and need not even reproduce the
+        same bytes if the lineage is nondeterministic."""
+        return self._cached
+
     def partition(self, i: int) -> Any:
         if i in self._cache:
             return self._cache[i]
@@ -76,6 +85,16 @@ class RDD:
         if self._cached:
             self._cache[i] = data
         return data
+
+    def memoize_partition(self, i: int, data: Any) -> None:
+        """Pin one already-computed partition, even on an uncached RDD.
+
+        For a consumer that had to realize a partition early (RowMatrix's
+        lazy width/dtype probe): the later full iteration reuses that
+        exact realization instead of recomputing it — which for a
+        nondeterministic lineage would not even be the same bytes. A
+        ``lose_partition`` still drops it back to lineage recompute."""
+        self._cache[i] = data
 
     def collect(self) -> list:
         return [self.partition(i) for i in range(self.num_partitions)]

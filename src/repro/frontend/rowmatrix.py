@@ -18,10 +18,12 @@ from repro.frontend.rdd import RDD
 class RowMatrix:
     def __init__(self, rdd: RDD, num_rows: int,
                  num_cols: Optional[int] = None,
-                 row_offsets: Optional[list[int]] = None):
+                 row_offsets: Optional[list[int]] = None,
+                 dtype=None):
         self.rdd = rdd
         self.num_rows = num_rows
         self._num_cols = num_cols
+        self._dtype = np.dtype(dtype) if dtype is not None else None
         self.row_offsets = row_offsets
 
     @property
@@ -31,10 +33,37 @@ class RowMatrix:
         ``map_rows`` must not eagerly run its function just to learn the
         output width — lineage stays lazy, like Spark's)."""
         if self._num_cols is None:
-            first = np.asarray(self.rdd.partition(0))
+            self._derive_meta()
+        return self._num_cols
+
+    @property
+    def dtype(self) -> np.dtype:
+        """Element dtype; ``None`` at construction means derive lazily
+        from the first partition, exactly like ``num_cols`` (``map_rows``
+        may change the dtype, and must not run eagerly to reveal it).
+        Tracked so byte-sized consumers — ``nbytes``, the transfer
+        layer's chunk sizing and cost models — never assume float64: a
+        float32 matrix is half the bytes."""
+        if self._dtype is None:
+            self._derive_meta()
+        return self._dtype
+
+    def _derive_meta(self) -> None:
+        """One partition-0 compute fills in both lazily-derived fields —
+        an uncached lineage must not run twice just to reveal its width
+        and then again for its dtype. The realized partition is memoized
+        so the consumer that follows (e.g. a streamed upload) reuses it
+        instead of recomputing — the probe costs zero extra computes
+        overall, and the metadata always describes the bytes actually
+        consumed."""
+        part0 = self.rdd.partition(0)
+        self.rdd.memoize_partition(0, part0)
+        first = np.asarray(part0)
+        if self._num_cols is None:
             # same convention as from_array: 1-D partitions are one column
             self._num_cols = first.shape[1] if first.ndim > 1 else 1
-        return self._num_cols
+        if self._dtype is None:
+            self._dtype = first.dtype
 
     @property
     def shape(self) -> tuple[int, int]:
@@ -42,7 +71,7 @@ class RowMatrix:
 
     @property
     def nbytes(self) -> int:
-        return self.num_rows * self.num_cols * 8
+        return self.num_rows * self.num_cols * self.dtype.itemsize
 
     # ---- construction ----
     @staticmethod
@@ -56,13 +85,35 @@ class RowMatrix:
 
         rdd = RDD(num_partitions, compute, (), "from_array").cache()
         ncols = arr.shape[1] if arr.ndim > 1 else 1
-        return RowMatrix(rdd, arr.shape[0], ncols)
+        return RowMatrix(rdd, arr.shape[0], ncols, dtype=arr.dtype)
+
+    @staticmethod
+    def from_blocks(blocks: list) -> "RowMatrix":
+        """Wrap pre-materialized per-partition row blocks *without
+        copying* — the landing buffers of a streamed engine→client fetch
+        (``transfer.to_client`` fills one block per partition chunk by
+        chunk instead of staging the whole matrix in one allocation)."""
+        if not blocks:
+            raise ValueError("from_blocks needs at least one block")
+        offsets = [0]
+        for b in blocks:
+            offsets.append(offsets[-1] + int(np.asarray(b).shape[0]))
+
+        rdd = RDD(len(blocks), lambda i: blocks[i], (), "from_blocks").cache()
+        first = np.asarray(blocks[0])
+        ncols = first.shape[1] if first.ndim > 1 else 1
+        return RowMatrix(rdd, offsets[-1], ncols, row_offsets=offsets,
+                         dtype=first.dtype)
 
     @staticmethod
     def random(num_rows: int, num_cols: int, num_partitions: int = 8,
                seed: int = 0, scale: float = 1.0) -> "RowMatrix":
         """Lazily-generated random matrix; each partition is reproducible
-        from (seed, partition index) — lineage in its purest form."""
+        from (seed, partition index) — lineage in its purest form.
+        Deliberately NOT ``.cache()``d: the matrix never needs to exist
+        in client memory all at once (uploads consume it partition by
+        partition; the transfer layer's dedup hash runs inline for
+        uncached sources, so nothing iterates it twice)."""
         bounds = np.linspace(0, num_rows, num_partitions + 1).astype(int)
 
         def compute(i):
@@ -71,13 +122,14 @@ class RowMatrix:
                                      num_cols)
 
         rdd = RDD(num_partitions, compute, (), "random")
-        return RowMatrix(rdd, num_rows, num_cols, list(bounds))
+        return RowMatrix(rdd, num_rows, num_cols, list(bounds),
+                         dtype=np.float64)
 
     # ---- client-side ops (the "pure Spark" substrate) ----
     def map_rows(self, fn: Callable[[np.ndarray], np.ndarray]) -> "RowMatrix":
-        """Apply ``fn`` per partition. Purely lazy: the output width is
-        derived from the mapped RDD on first ``num_cols`` access instead
-        of eagerly invoking ``fn`` on partition 0 a second time (which
+        """Apply ``fn`` per partition. Purely lazy: the output width *and
+        dtype* are derived from the mapped RDD on first access instead of
+        eagerly invoking ``fn`` on partition 0 a second time (which
         doubled partition-0 work and crashed on 1-D outputs)."""
         rdd = self.rdd.map_partitions(fn, "map_rows")
         return RowMatrix(rdd, self.num_rows, None)

@@ -72,8 +72,9 @@ def test_map_rows_is_lazy_and_derives_width_from_output():
     assert calls == []                     # construction ran nothing
     assert mapped.num_cols == 4            # lazily derived on access
     np.testing.assert_array_equal(mapped.collect(), np.hstack([x, x]))
-    # fn ran once per partition, never twice on partition 0
-    assert len(calls) == 3 + 1             # +1: num_cols peeked part. 0
+    # fn ran exactly once per partition: the num_cols peek memoizes the
+    # partition-0 realization it forced, and collect() reuses it
+    assert len(calls) == 3
 
     # 1-D outputs no longer crash: convention matches from_array
     norms = rm.map_rows(lambda b: np.linalg.norm(b, axis=1))
