@@ -8,6 +8,7 @@ import sys
 
 from benchmarks import (
     cache_amortization,
+    chain_pipelining,
     fig3_weak_scaling,
     kernel_bench,
     multiclient_throughput,
@@ -31,6 +32,7 @@ ALL = {
         [1, 2, 4], duration_s=2.0, k=8, workers=2),
     "cache": lambda: cache_amortization.run(
         3, (512, 128), k=8, smoke=False),
+    "chain": lambda: chain_pipelining.run([4, 16, 64]),
 }
 
 

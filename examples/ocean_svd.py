@@ -38,13 +38,15 @@ def main():
     print(f"[case 1] spark-only SVD: {t1:.2f}s "
           f"({st['bsp_rounds']} BSP rounds)   paper: 553.1s")
 
-    # use case 2: client loads, engine computes
+    # use case 2: client loads, engine computes — the typed façade API:
+    # routine outputs are lazy AlMatrix proxies, validated client-side
     ac = AlchemistContext(num_workers=4)
     ac.register_library("elemental", elemental)
+    el = ac.library("elemental")
     t0 = time.perf_counter()
     al = ac.send_matrix(xm)
-    res = ac.call("elemental", "truncated_svd", A=al, k=k)
-    u = ac.wrap(res["U"]).to_row_matrix()
+    U, S, V = el.truncated_svd(A=al, k=k)
+    u = U.to_row_matrix()
     t2 = time.perf_counter() - t0
     print(f"[case 2] spark-load + alchemist-SVD: {t2:.2f}s measured "
           f"  paper: 121.9s (4.5x)")
@@ -52,28 +54,27 @@ def main():
           "expected; the cluster-scale gap comes from the modeled BSP "
           "overhead, see benchmarks table5)")
 
-    # use case 3: engine loads and computes
+    # use case 3: engine loads and computes — the two stages chain
+    # lazily (one submit each, the SVD riding a dependency edge)
     t0 = time.perf_counter()
-    gen = ac.call("elemental", "random_matrix", rows=x.shape[0],
-                  cols=x.shape[1], seed=3)
-    res3 = ac.call("elemental", "truncated_svd", A=gen["A"], k=k)
-    _ = ac.wrap(res3["U"]).to_row_matrix()
+    gen = el.random_matrix(rows=x.shape[0], cols=x.shape[1], seed=3)
+    U3, _, _ = el.truncated_svd(A=gen, k=k)
+    _ = U3.to_row_matrix()
     t3 = time.perf_counter() - t0
     print(f"[case 3] alchemist-load + SVD: {t3:.2f}s measured "
           f"  paper: 69.7s (7.9x)")
 
     # agreement
-    sig2 = ac.wrap(res["S"]).to_numpy().ravel()
+    sig2 = S.to_numpy().ravel()
     print(f"sigma agreement (case1 vs case2): "
           f"{np.abs(sig1 - sig2).max() / sig1[0]:.2e}")
 
     # Fig 3: weak scaling by column replication
     print("\nFig 3 weak scaling (column replication):")
     for times in (1, 2, 4):
-        h = gen["A"] if times == 1 else ac.call(
-            "elemental", "replicate_cols", A=gen["A"], times=times)["A"]
+        h = gen if times == 1 else el.replicate_cols(A=gen, times=times)
         t0 = time.perf_counter()
-        ac.call("elemental", "truncated_svd", A=h, k=k, oversample=12)
+        el.truncated_svd(A=h, k=k, oversample=12)[0].result()
         t = time.perf_counter() - t0
         print(f"  x{times}: {t:.2f}s -> weak-scaled wall "
               f"(t/x) = {t / times:.2f}s")

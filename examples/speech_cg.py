@@ -45,6 +45,7 @@ def main():
 
     ac = AlchemistContext(num_workers=4)
     ac.register_library("skylark", skylark)
+    sky = ac.library("skylark")                  # typed façade
     bandwidth = float(np.sqrt(x.shape[1]))       # RBF median-distance scale
 
     # ---- offloaded path: send raw 440-dim features only ----
@@ -53,14 +54,15 @@ def main():
     al_y = ac.send_matrix(y)
     t_send = time.perf_counter() - t0
     t0 = time.perf_counter()
-    res = ac.call("skylark", "cg_solve", X=al_x, Y=al_y, lam=args.lam,
-                  rf_dim=args.rf, bandwidth=bandwidth, max_iters=200,
-                  tol=1e-7)
+    W = sky.cg_solve(X=al_x, Y=al_y, lam=args.lam, rf_dim=args.rf,
+                     bandwidth=bandwidth, max_iters=200, tol=1e-7)
+    W.result()                                   # force: solve only
     t_solve = time.perf_counter() - t0
-    w = ac.wrap(res["W"]).to_numpy()
+    w = W.to_numpy()                             # stream-back, untimed
+    stats = W.stats()                            # the routine's scalars
     print(f"[alchemist] send {t_send:.2f}s | solve {t_solve:.2f}s "
-          f"({res['iterations']} CG iters, residual "
-          f"{res['relative_residual']:.1e})")
+          f"({stats['iterations']} CG iters, residual "
+          f"{stats['relative_residual']:.1e})")
 
     # accuracy with the same engine-side feature map
     wmat, b = rf_weights(x.shape[1], args.rf, bandwidth, 0)

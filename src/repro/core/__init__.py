@@ -1,9 +1,12 @@
 # The paper's primary contribution: the Alchemist offload system —
-# client context + matrix handles + library registry + engine + transfer,
-# with async futures over the engine's hazard-aware task scheduler.
-from repro.core.context import AlchemistContext, AlFuture, AlMatrix
+# client context + lazy AlMatrix expression layer + typed library
+# façades + matrix handles + engine + transfer, with async futures over
+# the engine's hazard-aware task scheduler.
+from repro.core.context import AlchemistContext
 from repro.core.engine import AlchemistEngine
+from repro.core.expr import AlchemistError, AlFuture, AlMatrix, \
+    LibraryProxy
 from repro.core.handles import MatrixHandle
 
-__all__ = ["AlchemistContext", "AlFuture", "AlMatrix", "AlchemistEngine",
-           "MatrixHandle"]
+__all__ = ["AlchemistContext", "AlchemistError", "AlFuture", "AlMatrix",
+           "AlchemistEngine", "LibraryProxy", "MatrixHandle"]

@@ -1,50 +1,60 @@
 """Client-side API — the Alchemist-Client Interface (ACI, §3.1.2/§3.3.2).
 
-Usage mirrors the paper's Fig. 2:
+The façade surface mirrors calling a native library (the redesign the
+interface paper arXiv:1806.01270 converges on):
 
-    from repro.core import AlchemistContext, AlMatrix
-    from repro.core.libraries import elemental
+    from repro.core import AlchemistContext
 
-    ac = AlchemistContext(num_workers=4)
-    ac.register_library("elemental", elemental)
-    al_a = ac.send(AlMatrix, A)                 # or AlMatrix(ac, A)
-    q, r = ac.call("elemental", "qr", A=al_a.handle)
-    Q = AlMatrix.from_handle(ac, q).to_row_matrix()
-    ac.stop()
+    with AlchemistContext(num_workers=4) as ac:
+        from repro.core.libraries import elemental
+        ac.register_library("elemental", elemental)
+        el = ac.library("elemental")        # typed catalog over the wire
+        A = ac.send_matrix(a)               # streamed upload -> AlMatrix
+        Q, R = el.qr(A)                     # lazy: declared output order
+        G = (Q.T @ Q) + R                   # operator sugar, still lazy
+        G.to_numpy()                        # force + stream back
+
+``ac.library(name)`` fetches the engine's typed routine catalog over the
+``describe`` protocol endpoint and returns a :class:`LibraryProxy`:
+unknown routine, missing/unknown kwarg, and wrong-session handle all fail
+**client-side**, before anything crosses the bridge, with the
+catalog-derived message. Routine calls return lazy :class:`AlMatrix`
+proxies (one per declared output); chains of deferred proxies compile to
+engine-side dependency edges and submit as one pipelined burst with zero
+intermediate round trips — ``result()``/``to_numpy()``/``.shape`` force.
 
 Constructing a context performs the connect handshake against the engine
 (§3.1.1): the engine mints a session ID that scopes every later transfer
 and routine call to this client's handle namespace. Several contexts can
 attach to one engine concurrently — the paper's multiple Spark
 applications sharing one Alchemist instance — without clobbering each
-other's handles. ``stop()`` sends the disconnect, and the engine reclaims
-everything this session still owns.
+other's handles. ``stop()`` (or leaving the ``with`` block) sends the
+disconnect and the engine reclaims everything this session still owns;
+outstanding unfetched futures are marked so later use raises a clear
+:class:`AlchemistError`.
 
-Beyond the blocking ``call``, the context exposes the async path over the
-engine's task scheduler: ``call_async`` submits and returns an
-:class:`AlFuture` immediately. A future's *deferred output handles*
-(``fut["Q"]``) can be passed as arguments to further ``call_async``
-invocations before the producer has run — the chain pipelines entirely
-engine-side with zero client round trips (§3.3.2's resident-matrix
-chaining, now overlapped), while the engine's hazard tracking keeps the
-execution order correct.
+The original stringly-typed surface — ``ac.call``/``ac.call_async`` with
+``fut["Q"]`` deferred outputs — keeps working unchanged as a thin shim
+over the same submit path (it skips client-side validation, so errors
+surface engine-side as before). Prefer the façade API in new code.
 """
 from __future__ import annotations
 
 import types
-from typing import Any, Optional, Union
-
-import numpy as np
+import weakref
+from typing import Any, Optional
 
 from repro.core import protocol, transfer
 from repro.core.engine import ENGINE_LIBRARY, AlchemistEngine, \
     make_engine_mesh
+from repro.core.expr import AlchemistError, AlFuture, AlMatrix, \
+    LibraryProxy
 from repro.core.handles import MatrixHandle
+from repro.core.libraries import spec as specs
 from repro.frontend.rowmatrix import RowMatrix
 
-
-class AlchemistError(RuntimeError):
-    pass
+__all__ = ["AlchemistContext", "AlchemistError", "AlFuture", "AlMatrix",
+           "LibraryProxy"]
 
 
 class AlchemistContext:
@@ -55,6 +65,9 @@ class AlchemistContext:
     handle namespace, and transfer accounting. ``chunk_rows`` sets the
     default row-block size for streamed transfers (None = auto-size
     chunks to ~``transfer.DEFAULT_CHUNK_BYTES``).
+
+    Usable as a context manager: ``with AlchemistContext(...) as ac:``
+    calls :meth:`stop` on exit, even on error.
     """
 
     def __init__(self, num_workers: Optional[int] = None,
@@ -65,6 +78,8 @@ class AlchemistContext:
         self.engine = engine
         self.chunk_rows = chunk_rows
         self._stopped = False
+        self._futures: "weakref.WeakSet[AlFuture]" = weakref.WeakSet()
+        self._library_cache: dict[str, LibraryProxy] = {}
         res = protocol.decode_result(engine.handshake(
             protocol.encode_handshake(protocol.Handshake(
                 action=protocol.CONNECT, client=client_name))))
@@ -73,7 +88,14 @@ class AlchemistContext:
         self.session = res.values["session"]
         self.num_workers_granted = res.values["workers"]
 
-    # ---- library registration ----
+    def __enter__(self) -> "AlchemistContext":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.stop()
+        return False
+
+    # ---- library registration & discovery (the typed catalog) ----
     def register_library(self, name: str, module) -> None:
         """Ask the engine to load an ALI library module (§3.1.3), through
         the wire protocol like every other client action: the module
@@ -89,6 +111,41 @@ class AlchemistContext:
                 "engine.load_library for in-process objects")
         self.call(ENGINE_LIBRARY, "load_library", name=name,
                   module=module.__name__)
+        # a (re)load may change any catalog — refetch façades lazily
+        self._library_cache.clear()
+
+    def libraries(self) -> list[str]:
+        """Names of the engine's loaded libraries (``describe`` over the
+        wire), including the always-present ``_engine`` builtins."""
+        return sorted(self._describe())
+
+    def library(self, name: str, refresh: bool = False) -> LibraryProxy:
+        """The typed façade for one loaded library: attributes are its
+        routines (``Q, R = ac.library("elemental").qr(A)``), validated
+        client-side against the engine's declared catalog. The catalog
+        is fetched over the ``describe`` endpoint once and cached;
+        ``refresh=True`` (or any ``register_library`` on this context)
+        refetches."""
+        if not refresh:
+            cached = self._library_cache.get(name)
+            if cached is not None:
+                return cached
+        cats = self._describe(name)
+        proxy = LibraryProxy(self, name, {
+            rn: specs.from_wire(d)
+            for rn, d in cats[name]["routines"].items()})
+        self._library_cache[name] = proxy
+        return proxy
+
+    def _describe(self, library: str = "") -> dict:
+        """Wire-level catalog query; returns ``values["libraries"]``."""
+        self._check_alive()
+        res = protocol.decode_result(self.engine.describe(
+            protocol.encode_describe(protocol.Describe(
+                library=library, session=self.session))))
+        if res.error:
+            raise AlchemistError(res.error)
+        return res.values["libraries"]
 
     # ---- data movement (the streaming transfer layer, §3.2) ----
     def send_matrix(self, matrix, name: Optional[str] = None,
@@ -104,7 +161,7 @@ class AlchemistContext:
             self.engine, matrix, name=name, session=self.session,
             chunk_rows=chunk_rows if chunk_rows is not None
             else self.chunk_rows, dedup=dedup)
-        return AlMatrix(self, handle, last_transfer=rec)
+        return AlMatrix.wrap(self, handle, last_transfer=rec)
 
     def fetch(self, handle: MatrixHandle, num_partitions: int = 8,
               chunk_rows: Optional[int] = None) -> RowMatrix:
@@ -124,7 +181,10 @@ class AlchemistContext:
         until it completes (submit + wait on the engine's scheduler).
         Handle args resolve inside this session's namespace on the engine
         side; the result dict carries routine outputs plus ``_elapsed``
-        (execute) / ``_wait_s`` (queued) seconds."""
+        (execute) / ``_wait_s`` (queued) seconds.
+
+        Legacy shim: prefer ``ac.library(name).routine(...)``, which
+        validates client-side and returns lazy AlMatrix proxies."""
         return self.call_async(library, routine, **kwargs).result()
 
     def call_async(self, library: str, routine: str,
@@ -132,18 +192,29 @@ class AlchemistContext:
         """Submit one ALI routine to the engine's task scheduler and
         return immediately with an :class:`AlFuture`.
 
-        Args may be scalars, MatrixHandles, AlMatrix proxies, or the
-        deferred outputs of earlier futures (``earlier["Q"]``): deferred
-        args become dependency edges engine-side, so a whole chain can be
-        submitted in one burst and pipelines without further round trips.
+        Args may be scalars, MatrixHandles, AlMatrix proxies (concrete
+        *or* deferred), or the deferred outputs of earlier futures
+        (``earlier["Q"]``): deferred args become dependency edges
+        engine-side, so a whole chain can be submitted in one burst and
+        pipelines without further round trips.
 
         If the engine's content-addressed routine cache already holds this
         exact computation, the future comes back *already completed*
         (DONE-on-submit): no task is minted, ``result()`` returns without
         blocking, and ``_cache_hit``/``_saved_s`` report the skip.
+
+        Legacy shim: the façade path (``ac.library(...)``) submits
+        through the same machinery but validates args client-side first.
         """
         self._check_alive()
         args = {k: self._as_arg(v) for k, v in kwargs.items()}
+        return self._submit(library, routine, args)
+
+    def _submit(self, library: str, routine: str,
+                args: dict[str, Any]) -> "AlFuture":
+        """Encode + submit one command (args already wire-shaped); shared
+        by the legacy ``call_async`` and the façade RoutineProxy path."""
+        self._check_alive()
         wire = protocol.encode_command(protocol.Command(
             library=library, routine=routine, args=args,
             session=self.session))
@@ -153,12 +224,15 @@ class AlchemistContext:
         fut = AlFuture(self, sub.task, label=f"{library}.{routine}")
         if sub.cache_hit:
             fut._result = sub           # served at submit; nothing to wait
+        self._futures.add(fut)
         return fut
 
     @staticmethod
     def _as_arg(v):
         if isinstance(v, AlMatrix):
-            return v.handle
+            # concrete -> its handle; deferred -> a DeferredHandle edge
+            # (no round trip); freed/known-failed -> raises here
+            return v._wire_arg()
         if isinstance(v, AlFuture):
             raise TypeError(
                 "pass a future's named output (fut['Q']), not the future "
@@ -167,7 +241,7 @@ class AlchemistContext:
 
     def wrap(self, handle: MatrixHandle) -> "AlMatrix":
         """Wrap an engine handle (e.g. a routine output) as an AlMatrix."""
-        return AlMatrix(self, handle)
+        return AlMatrix.wrap(self, handle)
 
     def free(self, handle: MatrixHandle) -> None:
         """Release one reference to a session-visible handle."""
@@ -176,10 +250,25 @@ class AlchemistContext:
 
     def stop(self) -> None:
         """Disconnect: the engine reclaims every handle this session still
-        owns (the paper's driver detach). Idempotent."""
+        owns (the paper's driver detach). Idempotent.
+
+        Outstanding *unfetched* futures — and the deferred AlMatrix
+        proxies backed by them — are marked dead: any later use raises
+        :class:`AlchemistError` explaining the session dropped its task
+        results at disconnect, instead of the engine's KeyError for an
+        unknown task. Futures fetched before stop keep serving their
+        client-side cached results."""
         if self._stopped:
             return
         self._stopped = True
+        for fut in list(self._futures):
+            if fut._result is None:
+                fut._stop_msg = (
+                    f"AlchemistContext (session #{self.session}) was "
+                    f"stopped before task #{fut.task} "
+                    f"({fut.label or 'routine'}) was fetched; the engine "
+                    "drops a session's retained task results at "
+                    "disconnect — call result() before stop()")
         self.engine.handshake(protocol.encode_handshake(protocol.Handshake(
             action=protocol.DISCONNECT, session=self.session)))
 
@@ -192,121 +281,3 @@ class AlchemistContext:
             protocol.encode_task_op(protocol.TaskOp(
                 action=action, task=task, session=self.session))))
         return res
-
-
-class AlFuture:
-    """Client-side handle on one submitted task (the async half of the
-    ACI). ``result()`` blocks on the engine's ``wait`` endpoint;
-    ``done()``/``state()`` poll without blocking; ``fut[key]`` names one
-    of the routine's output handles — a real MatrixHandle once the task
-    finished, a :class:`protocol.DeferredHandle` placeholder before that,
-    which later ``call_async`` invocations accept as arguments (the
-    engine chains them with dependency edges, §3.3.2 pipelined)."""
-
-    def __init__(self, ac: AlchemistContext, task: int, label: str = ""):
-        self.ac = ac
-        self.task = task
-        self.label = label
-        self._result: Optional[protocol.Result] = None
-
-    def __getitem__(self, key: str
-                    ) -> Union[MatrixHandle, protocol.DeferredHandle]:
-        if self._result is None and not self.ac._stopped:
-            # resolve lazily: once the producer is terminal its outputs
-            # are real handles (one cheap poll; still zero round trips
-            # while the task is in flight)
-            poll = self.ac._task_op(protocol.POLL, self.task)
-            if poll.state in ("DONE", "FAILED"):
-                self._result = self.ac._task_op(protocol.WAIT, self.task)
-        if self._result is not None:
-            if self._result.error:
-                # chaining on a producer known to have failed is a
-                # client-side error — a deferred placeholder would only
-                # fail later with a worse message
-                raise AlchemistError(
-                    f"cannot take output {key!r} of failed "
-                    f"{self.label or 'task'} #{self.task}: "
-                    f"{self._result.error}")
-            v = self._result.values.get(key)
-            if not isinstance(v, MatrixHandle):
-                raise KeyError(
-                    f"{self.label or 'task'} #{self.task} produced no "
-                    f"handle named {key!r}")
-            return v
-        return protocol.DeferredHandle(task=self.task, key=key)
-
-    def state(self) -> str:
-        """Current scheduler state: QUEUED/RUNNING/DONE/FAILED. Raises
-        :class:`AlchemistError` if the engine no longer knows the task
-        (e.g. polled after ``ac.stop()``) — never loops as not-done."""
-        if self._result is not None:
-            return self._result.state
-        res = self.ac._task_op(protocol.POLL, self.task)
-        if res.error:
-            raise AlchemistError(res.error)
-        return res.state
-
-    def done(self) -> bool:
-        return self.state() in ("DONE", "FAILED")
-
-    def result(self) -> dict[str, Any]:
-        """Block until the task completes; return its outputs plus
-        ``_elapsed`` (execute seconds, legacy key), ``_wait_s`` (queued
-        behind dependencies/workers), ``_exec_s``, and the cache fields
-        ``_cache_hit``/``_saved_s`` (True and the avoided execute seconds
-        when the engine served this from its routine cache). Raises
-        :class:`AlchemistError` if the routine failed.
-
-        Fetch before ``ac.stop()``: disconnect drops the session's
-        retained task results engine-side, so an unfetched future raises
-        after stop, while one fetched earlier keeps serving its client-
-        side cache."""
-        if self._result is None:
-            self.ac._check_alive()
-            self._result = self.ac._task_op(protocol.WAIT, self.task)
-        res = self._result
-        if res.error:
-            raise AlchemistError(res.error)
-        out = dict(res.values)
-        out["_elapsed"] = res.elapsed
-        out["_wait_s"] = res.wait_s
-        out["_exec_s"] = res.exec_s
-        out["_cache_hit"] = res.cache_hit
-        out["_saved_s"] = res.saved_s
-        return out
-
-
-class AlMatrix:
-    """Client-side proxy for an engine-resident distributed matrix
-    (§3.3.2). Holds only the handle — the data stays on the engine until
-    explicitly materialized."""
-
-    def __init__(self, ac: AlchemistContext, data_or_handle,
-                 last_transfer=None):
-        self.ac = ac
-        if isinstance(data_or_handle, MatrixHandle):
-            self.handle = data_or_handle
-        else:
-            al = ac.send_matrix(data_or_handle)
-            self.handle = al.handle
-            last_transfer = al.last_transfer
-        self.last_transfer = last_transfer
-
-    @staticmethod
-    def from_handle(ac: AlchemistContext, handle: MatrixHandle) -> "AlMatrix":
-        return AlMatrix(ac, handle)
-
-    @property
-    def shape(self) -> tuple[int, ...]:
-        return self.handle.shape
-
-    def to_row_matrix(self, num_partitions: int = 8) -> RowMatrix:
-        """Materialize on the client (streams back chunk-by-chunk)."""
-        return self.ac.fetch(self.handle, num_partitions)
-
-    def to_numpy(self) -> np.ndarray:
-        return self.to_row_matrix().collect()
-
-    def free(self) -> None:
-        """Release this proxy's reference on the engine."""
-        self.ac.free(self.handle)

@@ -40,6 +40,7 @@ launched on "a user-specified number of nodes" (§3.1.1).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import importlib
 import itertools
@@ -54,6 +55,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import cache as caching, protocol, scheduler as scheduling
 from repro.core.costmodel import CacheLog, TaskLog, TransferLog
 from repro.core.handles import MatrixHandle
+from repro.core.libraries import spec as specs
 
 SYSTEM_SESSION = 0
 
@@ -196,6 +198,15 @@ class AlchemistEngine:
         self._store_ids = itertools.count(1)
         self._by_fingerprint: dict[str, int] = {}
         self._libraries: dict[str, dict[str, Any]] = {}
+        # wire-ready typed catalogs (library -> routine -> spec dict),
+        # rebuilt at load_library time and served by ``describe``; the
+        # engine builtins are always discoverable
+        self._catalogs: dict[str, dict[str, dict]] = {
+            ENGINE_LIBRARY: specs.catalog_to_wire(self._BUILTINS)}
+        # client<->engine crossings per wire endpoint — what the chain-
+        # pipelining benchmark counts to prove a lazy chain submits with
+        # zero intermediate round trips
+        self.endpoint_counts: collections.Counter = collections.Counter()
         self.transfer_log = transfer_log or TransferLog(
             engine_procs=self.num_workers)
         self.task_log = TaskLog()
@@ -285,6 +296,8 @@ class AlchemistEngine:
         """Protocol endpoint for connect/disconnect. Returns an encoded
         Result: on connect, ``values`` carries the fresh session ID and the
         worker count (the paper's driver handing back its resource grant)."""
+        with self._state_lock:
+            self.endpoint_counts["handshake"] += 1
         try:
             hs = protocol.decode_handshake(wire)
             if hs.action == protocol.CONNECT:
@@ -325,6 +338,10 @@ class AlchemistEngine:
             raise TypeError(f"library {name!r} exports no ROUTINES dict")
         with self._state_lock:
             self._libraries[name] = routines
+            # (re)build the typed catalog the describe endpoint serves:
+            # decorated routines carry their declared spec, undecorated
+            # ones catalog by introspection (declared=False)
+            self._catalogs[name] = specs.catalog_to_wire(routines)
             if self.cache is not None:
                 for entry in self.cache.invalidate_library(name):
                     self.cache_log.record(entry.session, entry.label,
@@ -333,6 +350,40 @@ class AlchemistEngine:
 
     def libraries(self) -> list[str]:
         return sorted(self._libraries)
+
+    def describe(self, wire: bytes) -> bytes:
+        """Protocol endpoint for catalog discovery: reply with the typed
+        routine schemas of one library (``Describe.library``) or of every
+        loaded library plus the engine builtins. The schemas are what
+        ``load_library`` built from the routines' ``@routine``
+        declarations — clients rebuild them with ``spec.from_wire`` and
+        validate calls before anything else crosses the bridge."""
+        with self._state_lock:
+            self.endpoint_counts["describe"] += 1
+        try:
+            d = protocol.decode_describe(wire)
+            if d.session == SYSTEM_SESSION:
+                # same wire discipline as submit: the system namespace
+                # is the trusted in-process principal, not a client
+                raise ValueError(
+                    "discovery cannot run in the system session; "
+                    "connect() a session first")
+            self.session(d.session)             # raises if unknown
+            with self._state_lock:
+                cats = {n: dict(c) for n, c in self._catalogs.items()}
+            if d.library:
+                if d.library not in cats:
+                    raise LibraryNotRegistered(
+                        f"library {d.library!r} not registered (loaded: "
+                        f"{sorted(n for n in cats if n != ENGINE_LIBRARY)})")
+                cats = {d.library: cats[d.library]}
+            return protocol.encode_result(protocol.Result(
+                values={"libraries": {n: {"routines": c}
+                                      for n, c in cats.items()}},
+                session=d.session))
+        except Exception as e:
+            return protocol.encode_result(protocol.Result(
+                values={}, error=f"{type(e).__name__}: {e}"))
 
     # ---- handle lifecycle (bindings over refcounted stores) ----
     def put(self, array: jax.Array, name: Optional[str] = None,
@@ -788,6 +839,8 @@ class AlchemistEngine:
         carries the memoized values with ``cache_hit=True``, ``task=0``,
         and no task is ever minted.
         """
+        with self._state_lock:
+            self.endpoint_counts["submit"] += 1
         try:
             cmd = protocol.decode_command(wire_command)
         except Exception as e:
@@ -846,6 +899,8 @@ class AlchemistEngine:
         task is terminal and replies with its full Result (queue-wait vs
         execute split included). Tasks are session-scoped: a client may
         only observe its own."""
+        with self._state_lock:
+            self.endpoint_counts["task_op"] += 1
         try:
             op = protocol.decode_task_op(wire_op)
             task = self.scheduler.task(op.task)
@@ -1006,6 +1061,7 @@ class AlchemistEngine:
                     values={}, error=msg, session=cmd.session)), msg)
 
     # ---- engine builtins (wire-reachable under ENGINE_LIBRARY) ----
+    @specs.routine(outputs=())
     def _builtin_load_library(view, name: str, module: str):
         """Wire path for library registration: import ``module`` by path
         and register its ROUTINES under ``name``. Submitted as a scheduler

@@ -12,6 +12,13 @@ values / MatrixHandles — the ALI calling convention (§3.1.3). Handle
 arguments resolve inside the *calling session's* namespace and output
 handles are minted into it, so concurrent clients sharing one engine
 (§3.1.1) cannot read or clobber each other's matrices.
+
+Each routine declares its typed schema with :func:`spec.routine` —
+parameter kinds read off the signature (un-annotated = engine matrix),
+plus the *ordered output names* that client-side tuple unpacking relies
+on (``Q, R = el.qr(A)``). The engine catalogs these at ``load_library``
+time and serves them over the ``describe`` endpoint, so clients validate
+calls before anything crosses the bridge.
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.libraries.spec import routine
 from repro.kernels.gram import ops as gram_ops
 
 
@@ -37,6 +45,7 @@ def _as_f64(a):
 
 
 # ---------- routines ----------
+@routine(outputs=("A",))
 def random_matrix(engine, rows: int, cols: int, seed: int = 0,
                   scale: float = 1.0, name: str = "random"):
     """Engine-side data creation (the paper's 'Alchemist loads the data'
@@ -51,6 +60,7 @@ def random_matrix(engine, rows: int, cols: int, seed: int = 0,
     return {"A": engine.put(arr, name=name)}
 
 
+@routine(outputs=("A",))
 def replicate_cols(engine, A, times: int):
     """Column-wise replication (paper Fig. 3: 2.2TB -> 17.6TB scaling)."""
     x = engine.get(A)
@@ -58,11 +68,31 @@ def replicate_cols(engine, A, times: int):
     return {"A": engine.put(out, name=f"{A.name}x{times}")}
 
 
+@routine(outputs=("C",))
 def multiply(engine, A, B):
     x, y = engine.get(A), engine.get(B)
     return {"C": engine.put(x @ y)}
 
 
+@routine(outputs=("C",))
+def add(engine, A, B):
+    """Elementwise C = A + B (the lowering target of client-side
+    ``A + B`` on AlMatrix proxies)."""
+    x, y = engine.get(A), engine.get(B)
+    if x.shape != y.shape:
+        raise ValueError(f"add expects equal shapes, got {tuple(x.shape)} "
+                         f"and {tuple(y.shape)}")
+    return {"C": engine.put(x + y)}
+
+
+@routine(outputs=("C",))
+def transpose(engine, A):
+    """C = A^T (the lowering target of client-side ``A.T``)."""
+    x = engine.get(A)
+    return {"C": engine.put(jnp.asarray(x.T))}
+
+
+@routine(outputs=("G",))
 def gram(engine, A, use_pallas: bool = False):
     """G = A^T A via the blocked kernel (interpret-mode on CPU)."""
     x = engine.get(A)
@@ -70,6 +100,7 @@ def gram(engine, A, use_pallas: bool = False):
     return {"G": engine.put(g)}
 
 
+@routine(outputs=("Q", "R"))
 def qr(engine, A):
     """Thin QR. On the engine mesh the row-sharded x makes this a TSQR-like
     computation under GSPMD (per-shard factor + small recombine)."""
@@ -78,6 +109,7 @@ def qr(engine, A):
     return {"Q": engine.put(q), "R": engine.put(r)}
 
 
+@routine(outputs=("U", "S", "V"))
 def truncated_svd(engine, A, k: int, oversample: int = 32,
                   max_iters: int = 0, seed: int = 0):
     """Rank-k truncated SVD, ARPACK-style: Lanczos (full reorthogonalization)
@@ -139,6 +171,7 @@ def truncated_svd(engine, A, k: int, oversample: int = 32,
     }
 
 
+@routine(outputs=("U", "S", "V"))
 def gram_svd(engine, A, k: int, use_pallas: bool = False):
     """Direct route for modest column counts (the paper's ocean matrix is
     6.1M x 8096 — exactly this regime): form G = A^T A with the blocked
@@ -155,6 +188,7 @@ def gram_svd(engine, A, k: int, use_pallas: bool = False):
             "V": engine.put(v.astype(jnp.float32))}
 
 
+@routine(outputs=("U", "S", "V"))
 def randomized_svd(engine, A, k: int, oversample: int = 8,
                    power_iters: int = 2, seed: int = 0):
     """RandNLA alternative (Halko et al.): range finder + small SVD."""
@@ -182,6 +216,8 @@ ROUTINES = {
     "random_matrix": random_matrix,
     "replicate_cols": replicate_cols,
     "multiply": multiply,
+    "add": add,
+    "transpose": transpose,
     "gram": gram,
     "qr": qr,
     "truncated_svd": truncated_svd,

@@ -15,10 +15,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.libraries.spec import routine
 from repro.kernels.normal_matvec import ops as nm_ops
 from repro.kernels.rf_map import ops as rf_ops
 
 
+@routine(outputs=("Z",))
 def random_features(engine, X, rf_dim: int, bandwidth: float = 1.0,
                     seed: int = 0):
     """Z = sqrt(2/D) cos(X W / sigma + b) — expansion happens on the engine
@@ -44,6 +46,7 @@ def _cg_step(x, lam_n, state, use_pallas=False):
     return w, r, p, rs_new
 
 
+@routine(outputs=("W",))
 def cg_solve(engine, X, Y, lam: float = 1e-5, rf_dim: int = 0,
              bandwidth: float = 1.0, max_iters: int = 200,
              tol: float = 1e-8, seed: int = 0, use_pallas: bool = False):
@@ -94,6 +97,7 @@ def cg_solve(engine, X, Y, lam: float = 1e-5, rf_dim: int = 0,
     }
 
 
+@routine(outputs=("W", "H"))
 def nmf(engine, A, k: int, max_iters: int = 100, seed: int = 0,
         eps: float = 1e-9):
     """Non-negative matrix factorization (multiplicative updates) — the

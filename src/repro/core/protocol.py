@@ -17,6 +17,12 @@ Three message kinds cross the client/engine boundary, all msgpack-encoded:
 * ``TaskOp`` — ``poll`` (non-blocking state query) or ``wait`` (block until
   terminal) against a previously submitted task, scoped to the owning
   session.
+* ``Describe`` — catalog discovery: ask the engine for the typed routine
+  schemas (``core/libraries/spec.py``) of one loaded library, or of all of
+  them. The reply's ``values["libraries"]`` maps library name to
+  ``{"routines": {name: spec-dict}}``; clients rebuild ``RoutineSpec``
+  objects with ``spec.from_wire`` and validate calls *before* submitting
+  anything (the fail-fast half of the ACI).
 * ``Result`` — values, timing, the echoing session, and an ``error`` string
   (empty on success) so engine-side failures propagate as data instead of
   exceptions, exactly like an error status on the socket. For scheduled
@@ -86,6 +92,15 @@ class DeferredHandle:
     """
     task: int
     key: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Describe:
+    """Catalog query: the typed routine schemas of ``library`` (or every
+    loaded library when empty). ``session`` must name a connected
+    session — discovery is a client action like any other."""
+    library: str = ""
+    session: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -200,6 +215,21 @@ def decode_command(data: bytes) -> Command:
     # system namespace would silently grant it system-handle visibility.
     return Command(library=d["library"], routine=d["routine"],
                    args=_unpack_value(d["args"]), session=d["session"])
+
+
+def encode_describe(d: Describe) -> bytes:
+    """Serialize a catalog query."""
+    return msgpack.packb({
+        "library": d.library,
+        "session": d.session,
+    })
+
+
+def decode_describe(data: bytes) -> Describe:
+    """Inverse of :func:`encode_describe` (session mandatory, like
+    Command: discovery must not default into the system namespace)."""
+    d = msgpack.unpackb(data)
+    return Describe(library=d.get("library", ""), session=d["session"])
 
 
 def encode_task_op(op: TaskOp) -> bytes:
