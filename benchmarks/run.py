@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
 import sys
 
 from benchmarks import (
+    backend_fusion,
     cache_amortization,
     chain_pipelining,
     fig3_weak_scaling,
@@ -33,6 +34,9 @@ ALL = {
     "cache": lambda: cache_amortization.run(
         3, (512, 128), k=8, smoke=False),
     "chain": lambda: chain_pipelining.run([4, 16, 64]),
+    # smoke-sized here; the standalone script exposes the full sweep
+    "fusion": lambda: (backend_fusion.run([4, 16]),
+                       backend_fusion.run_routine_table(dim=96)),
 }
 
 

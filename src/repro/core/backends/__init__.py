@@ -1,0 +1,77 @@
+"""Pluggable execution backends (the Backend ABI; see ``base.py``).
+
+The registry maps backend names to :class:`~.base.ExecutionBackend`
+classes. An engine instantiates every registered backend at
+construction; a client selects one per session over the ``configure``
+protocol endpoint (``AlchemistContext(backend="reference")``), defaulting
+to :data:`DEFAULT_BACKEND`.
+
+Bundled backends:
+
+* ``jax`` — GSPMD execution on the engine mesh, Pallas kernels where
+  available, single-``jax.jit`` chain fusion (the default);
+* ``reference`` — plain numpy, sequential, no fusion: the conformance
+  oracle and debugging tool.
+"""
+from __future__ import annotations
+
+from repro.core.backends.base import (
+    ALI,
+    ARRAY,
+    BLOCK2D,
+    LAYOUTS,
+    REPLICATED,
+    ROWBLOCK,
+    BackendError,
+    ExecutionBackend,
+    ExecutionPlan,
+    Input,
+    PlanStep,
+    RoutineImpl,
+    StepRef,
+)
+from repro.core.backends.jax_backend import JaxBackend
+from repro.core.backends.reference import ReferenceBackend
+
+DEFAULT_BACKEND = "jax"
+
+_REGISTRY: dict[str, type] = {
+    JaxBackend.name: JaxBackend,
+    ReferenceBackend.name: ReferenceBackend,
+}
+
+__all__ = [
+    "ALI", "ARRAY", "BLOCK2D", "LAYOUTS", "REPLICATED", "ROWBLOCK",
+    "BackendError", "DEFAULT_BACKEND", "ExecutionBackend", "ExecutionPlan",
+    "Input", "JaxBackend", "PlanStep", "ReferenceBackend", "RoutineImpl",
+    "StepRef", "available_backends", "create_backend", "create_backends",
+    "register_backend",
+]
+
+
+def register_backend(cls: type) -> type:
+    """Class decorator adding a third-party backend to the registry."""
+    if not cls.name:
+        raise BackendError("backend classes must declare a non-empty name")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def create_backend(name: str) -> ExecutionBackend:
+    cls = _REGISTRY.get(name)
+    if cls is None:
+        raise BackendError(
+            f"unknown execution backend {name!r} "
+            f"(available: {', '.join(available_backends())})")
+    return cls()
+
+
+def create_backends() -> dict[str, ExecutionBackend]:
+    """One fresh instance of every registered backend (what an engine
+    builds at construction — instances are per-engine so compile caches
+    never leak across engines)."""
+    return {name: cls() for name, cls in _REGISTRY.items()}

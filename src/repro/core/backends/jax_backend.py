@@ -1,0 +1,298 @@
+"""The jax/pallas backend — the engine's accelerated execution
+environment, and the one that **fuses chains**.
+
+All of the bundled libraries' compute moved here from
+``core/libraries/*.py`` (the library modules now carry only the typed
+specs). Implementations are array-level: jax arrays in, jax arrays out;
+the blocked Pallas kernels under ``src/repro/kernels`` are reused where
+they exist (``gram``, ``rf_map``, ``normal_matvec`` — all with jnp
+fallbacks on this CPU container, Pallas interpret-mode validated by the
+kernel test sweeps).
+
+**Chain fusion.** Implementations marked ``fusible`` are pure, traceable
+array programs. When the engine drains a dependency chain of deferred
+ops that a lazy client submitted in one burst (see
+``scheduler.claim_chain`` / ``engine._run_fused``), :meth:`compile`
+lowers the whole multi-step plan into a **single ``jax.jit`` program**:
+one XLA dispatch for the entire chain, chain-internal values flowing as
+SSA edges inside the program — never materialized engine-side, never
+crossing to host — with every step's outputs returned together at the
+end. Compiled programs are cached by plan structure
+(:meth:`ExecutionPlan.signature`), so a tenant replaying the same chain
+shape pays tracing once.
+
+Host-loop drivers (Lanczos SVD, CG, NMF) are registered non-fusible:
+they are reverse-communication loops around jitted matvecs, exactly like
+ARPACK driving distributed matvecs in the paper's MPI implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backends import base
+from repro.core.backends.base import REPLICATED, ROWBLOCK
+from repro.core.backends.reference import (
+    _lanczos_gram,
+    mllib_cg_solve,
+    mllib_truncated_svd,
+)
+from repro.kernels.gram import ops as gram_ops
+from repro.kernels.normal_matvec import ops as nm_ops
+from repro.kernels.rf_map import ops as rf_ops
+
+_DENSE = (ROWBLOCK, REPLICATED)
+
+
+class JaxBackend(base.ExecutionBackend):
+    """GSPMD execution on the engine mesh, single-program chain fusion."""
+
+    name = "jax"
+    supports_fusion = True
+
+    def __init__(self):
+        super().__init__()
+        # plan-structure -> jitted program; bounds itself by distinct
+        # chain shapes (scalars are part of the key — they are baked
+        # into the trace as constants)
+        self._programs: dict[tuple, object] = {}
+
+    def to_native(self, array) -> jax.Array:
+        return array if isinstance(array, jax.Array) else jnp.asarray(array)
+
+    def is_array(self, value) -> bool:
+        return isinstance(value, (jax.Array, np.ndarray)) and \
+            getattr(value, "ndim", 0) >= 1
+
+    def compile(self, plan: base.ExecutionPlan):
+        """Single-step plans run the impl directly (host-loop drivers
+        must not be traced); multi-step plans — only ever built from
+        fusible steps — become one cached ``jax.jit`` program."""
+        if len(plan.steps) == 1:
+            return super().compile(plan)
+        sig = plan.signature()
+        program = self._programs.get(sig) if sig is not None else None
+        if program is None:
+            def fused(inputs: dict) -> list[dict]:
+                outs: list[dict] = []
+                for step in plan.steps:
+                    outs.append(step.impl.fn(
+                        **base.resolve_step_args(step, outs, inputs)))
+                return outs
+            program = jax.jit(fused)
+            if sig is not None:
+                self._programs[sig] = program
+        return program
+
+
+register = JaxBackend.register
+
+
+# ---------------------------------------------------------------------------
+# elemental
+# ---------------------------------------------------------------------------
+@register("elemental", "random_matrix", fusible=True, accepts=_DENSE)
+def _random_matrix(rows: int, cols: int, seed: int = 0, scale: float = 1.0,
+                   name: str = "random"):
+    key = jax.random.PRNGKey(seed)
+    return {"A": scale * jax.random.normal(key, (rows, cols), jnp.float32)}
+
+
+@register("elemental", "replicate_cols", fusible=True, accepts=_DENSE)
+def _replicate_cols(A, times: int):
+    return {"A": jnp.tile(A, (1, times))}
+
+
+@register("elemental", "multiply", fusible=True, accepts=_DENSE)
+def _multiply(A, B):
+    return {"C": A @ B}
+
+
+@register("elemental", "add", fusible=True, accepts=_DENSE)
+def _add(A, B):
+    if A.shape != B.shape:                   # shapes are static under jit
+        raise ValueError(f"add expects equal shapes, got {tuple(A.shape)} "
+                         f"and {tuple(B.shape)}")
+    return {"C": A + B}
+
+
+@register("elemental", "transpose", fusible=True, accepts=_DENSE)
+def _transpose(A):
+    # no host materialization: the engine re-lands the result in its
+    # distributed layout (the dist-sharding put path)
+    return {"C": A.T}
+
+
+@register("elemental", "gram", fusible=True, accepts=_DENSE)
+def _gram(A, use_pallas: bool = False):
+    return {"G": gram_ops.gram(A, use_pallas=use_pallas)}
+
+
+@register("elemental", "qr", fusible=True, accepts=_DENSE)
+def _qr(A):
+    q, r = jnp.linalg.qr(A, mode="reduced")
+    return {"Q": q, "R": r}
+
+
+@jax.jit
+def _gram_matvec(x, v):
+    """v -> X^T (X v); never materializes X^T X."""
+    return x.T @ (x @ v)
+
+
+@register("elemental", "truncated_svd", accepts=_DENSE)
+def _truncated_svd(A, k: int, oversample: int = 32, max_iters: int = 0,
+                   seed: int = 0):
+    """ARPACK-style driver: the shared host-side Lanczos loop
+    (``reference._lanczos_gram`` — one copy, so a numerical fix can
+    never leave the backends divergent) around a *jitted distributed*
+    matvec, exactly like ARPACK's reverse-communication interface
+    driving distributed matvecs in the paper's MPI implementation."""
+    x = A
+    n, d = x.shape
+    m = min(d, k + oversample) if max_iters == 0 else min(d, max_iters)
+    q0 = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (d,),
+                                      x.dtype), np.float64)
+
+    def matvec(q):
+        return np.asarray(_gram_matvec(x, jnp.asarray(q, x.dtype)),
+                          np.float64)
+
+    sigma, V, iters, matvecs = _lanczos_gram(matvec, d, k, m, q0)
+    v_dev = jnp.asarray(V, x.dtype)
+    U = (x @ v_dev) / jnp.maximum(jnp.asarray(sigma, x.dtype), 1e-30)
+    return {"U": U, "S": jnp.asarray(sigma, jnp.float32), "V": v_dev,
+            "lanczos_iters": iters, "matvecs": matvecs}
+
+
+@register("elemental", "gram_svd", fusible=True, accepts=_DENSE)
+def _gram_svd(A, k: int, use_pallas: bool = False):
+    x = A
+    g = gram_ops.gram(x, use_pallas=use_pallas)
+    evals, evecs = jnp.linalg.eigh(g)
+    order = jnp.argsort(evals)[::-1][:k]
+    lam = jnp.maximum(evals[order], 0.0)
+    sigma = jnp.sqrt(lam)
+    v = evecs[:, order]
+    u = (x @ v.astype(x.dtype)) / jnp.maximum(sigma.astype(x.dtype), 1e-30)
+    return {"U": u, "S": sigma.astype(jnp.float32),
+            "V": v.astype(jnp.float32)}
+
+
+@register("elemental", "randomized_svd", accepts=_DENSE)
+def _randomized_svd(A, k: int, oversample: int = 8, power_iters: int = 2,
+                    seed: int = 0):
+    x = A
+    n, d = x.shape
+    ell = min(d, k + oversample)
+    key = jax.random.PRNGKey(seed)
+
+    @jax.jit
+    def sketch(x):
+        omega = jax.random.normal(key, (d, ell), x.dtype)
+        y = x @ omega
+        for _ in range(power_iters):
+            y = x @ (x.T @ y)
+        q, _ = jnp.linalg.qr(y, mode="reduced")
+        b = q.T @ x                                            # (ell, d)
+        ub, s, vt = jnp.linalg.svd(b, full_matrices=False)
+        return q @ ub[:, :k], s[:k], vt[:k].T
+
+    u, s, v = sketch(x)
+    return {"U": u, "S": s, "V": v}
+
+
+# ---------------------------------------------------------------------------
+# skylark
+# ---------------------------------------------------------------------------
+@register("skylark", "random_features", accepts=_DENSE)
+def _random_features(X, rf_dim: int, bandwidth: float = 1.0, seed: int = 0):
+    return {"Z": rf_ops.rf_map(X, rf_dim, bandwidth=bandwidth, seed=seed)}
+
+
+def _cg_step(x, lam_n, state, use_pallas=False):
+    """One CG iteration on the normal equations; with use_pallas the
+    fused normal_matvec kernel streams X once per iteration instead of
+    twice (the CG loop's dominant HBM traffic)."""
+    w, r, p, rs = state
+    ap = nm_ops.normal_matvec(x, p, use_pallas=use_pallas).astype(x.dtype) \
+        + lam_n * p
+    alpha = rs / jnp.sum(p * ap, axis=0)
+    w = w + alpha * p
+    r = r - alpha * ap
+    rs_new = jnp.sum(r * r, axis=0)
+    p = r + (rs_new / rs) * p
+    return w, r, p, rs_new
+
+
+@register("skylark", "cg_solve", accepts=_DENSE)
+def _cg_solve(X, Y, lam: float = 1e-5, rf_dim: int = 0,
+              bandwidth: float = 1.0, max_iters: int = 200,
+              tol: float = 1e-8, seed: int = 0, use_pallas: bool = False):
+    x = X
+    if rf_dim:
+        x = rf_ops.rf_map(x, rf_dim, bandwidth=bandwidth, seed=seed)
+    y = Y
+    n, d = x.shape
+    lam_n = jnp.asarray(n * lam, x.dtype)
+
+    b = x.T @ y                                  # (d, c) rhs
+    b_norm = jnp.linalg.norm(b, axis=0)
+    w = jnp.zeros(b.shape, x.dtype)
+    r = b
+    p = r
+    rs = jnp.sum(r * r, axis=0)
+
+    _step = jax.jit(lambda x, lam_n, st: _cg_step(x, lam_n, st,
+                                                  use_pallas=use_pallas))
+
+    iters = 0
+    rel = float(jnp.max(jnp.sqrt(rs) / jnp.maximum(b_norm, 1e-30)))
+    history = [rel]
+    state = (w, r, p, rs)
+    while iters < max_iters and rel > tol:
+        state = _step(x, lam_n, state)
+        iters += 1
+        rel = float(jnp.max(jnp.sqrt(state[3])
+                            / jnp.maximum(b_norm, 1e-30)))
+        history.append(rel)
+
+    return {
+        "W": state[0],
+        "iterations": iters,
+        "relative_residual": rel,
+        "residual_history": [float(h) for h in history],
+        "expanded_dim": int(d),
+    }
+
+
+@register("skylark", "nmf", accepts=_DENSE)
+def _nmf(A, k: int, max_iters: int = 100, seed: int = 0, eps: float = 1e-9):
+    x = jnp.maximum(A, 0.0)
+    n, d = x.shape
+    kw, kh = jax.random.split(jax.random.PRNGKey(seed))
+    scale = jnp.sqrt(jnp.mean(x) / k)
+    w = scale * jax.random.uniform(kw, (n, k), x.dtype, 0.1, 1.0)
+    h = scale * jax.random.uniform(kh, (k, d), x.dtype, 0.1, 1.0)
+
+    @jax.jit
+    def update(w, h):
+        h = h * (w.T @ x) / (w.T @ (w @ h) + eps)
+        w = w * (x @ h.T) / (w @ (h @ h.T) + eps)
+        return w, h
+
+    for _ in range(max_iters):
+        w, h = update(w, h)
+    resid = float(jnp.linalg.norm(x - w @ h) / jnp.linalg.norm(x))
+    return {"W": w, "H": h, "relative_residual": resid,
+            "iterations": max_iters}
+
+
+# ---------------------------------------------------------------------------
+# mllib — shared with the reference backend (see backends/reference.py:
+# the pure-Spark baseline is client-side row-partitioned math by
+# construction; accelerating it would unmake the comparison)
+# ---------------------------------------------------------------------------
+register("mllib", "cg_solve", accepts=_DENSE)(mllib_cg_solve)
+register("mllib", "truncated_svd", accepts=_DENSE)(mllib_truncated_svd)

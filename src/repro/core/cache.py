@@ -139,16 +139,26 @@ def _canonical(v: Any, fp_of: Callable[[MatrixHandle], str]) -> Any:
 
 
 def routine_key(library: str, routine: str, args: dict,
-                fp_of: Callable[[MatrixHandle], str]) -> Optional[str]:
+                fp_of: Callable[[MatrixHandle], str],
+                scope: str = "") -> Optional[str]:
     """Content-addressed cache key for one routine invocation, or ``None``
     when the invocation is uncacheable. ``fp_of`` maps a handle to its
     current content fingerprint (raising :class:`Uncacheable`/``KeyError``
-    for unresolvable handles)."""
+    for unresolvable handles).
+
+    ``scope`` partitions the key space — the engine passes the issuing
+    session's *execution backend* name, so a result computed by the jax
+    backend is never served to a session that asked for the reference
+    backend (whose whole point is recomputing with the other
+    implementation). Same scope, same content ⇒ same key, which also
+    makes derived output fingerprints identical for a chain whether it
+    executed fused or op-by-op."""
     try:
         canon = _canonical(args, fp_of)
     except (Uncacheable, KeyError):
         return None
-    payload = msgpack.packb([library, routine, canon], use_bin_type=True)
+    payload = msgpack.packb([library, routine, canon, scope],
+                            use_bin_type=True)
     return hashlib.blake2b(payload, digest_size=_DIGEST_SIZE).hexdigest()
 
 

@@ -25,7 +25,11 @@ intermediate round trips — ``result()``/``to_numpy()``/``.shape`` force.
 
 Constructing a context performs the connect handshake against the engine
 (§3.1.1): the engine mints a session ID that scopes every later transfer
-and routine call to this client's handle namespace. Several contexts can
+and routine call to this client's handle namespace.
+``AlchemistContext(backend="reference")`` (or :meth:`configure`) selects
+the *execution backend* the session's routines run in — the jax/pallas
+environment by default, the plain-numpy reference implementation for
+debugging — over the ``configure`` protocol endpoint. Several contexts can
 attach to one engine concurrently — the paper's multiple Spark
 applications sharing one Alchemist instance — without clobbering each
 other's handles. ``stop()`` (or leaving the ``with`` block) sends the
@@ -72,7 +76,9 @@ class AlchemistContext:
 
     def __init__(self, num_workers: Optional[int] = None,
                  engine: Optional[AlchemistEngine] = None,
-                 client_name: str = "", chunk_rows: Optional[int] = None):
+                 client_name: str = "", chunk_rows: Optional[int] = None,
+                 backend: Optional[str] = None,
+                 fusion: Optional[bool] = None):
         if engine is None:
             engine = AlchemistEngine(make_engine_mesh(num_workers))
         self.engine = engine
@@ -87,6 +93,16 @@ class AlchemistContext:
             raise AlchemistError(res.error)
         self.session = res.values["session"]
         self.num_workers_granted = res.values["workers"]
+        # the execution environment this session's commands run in
+        # (``core/backends``); ``backend=None`` keeps the engine default
+        self.backend = res.values.get("backend", "")
+        if backend is not None or fusion is not None:
+            try:
+                self.configure(backend=backend, fusion=fusion)
+            except AlchemistError:
+                # leave no half-connected session behind a bad backend name
+                self.stop()
+                raise
 
     def __enter__(self) -> "AlchemistContext":
         return self
@@ -136,6 +152,30 @@ class AlchemistContext:
             for rn, d in cats[name]["routines"].items()})
         self._library_cache[name] = proxy
         return proxy
+
+    def configure(self, backend: Optional[str] = None,
+                  fusion: Optional[bool] = None) -> dict:
+        """Select this session's execution environment over the
+        ``configure`` protocol endpoint: ``backend`` names a registered
+        engine backend (``"jax"`` — the accelerated default — or
+        ``"reference"``, the plain-numpy debugging implementation);
+        ``fusion=False`` opts the session out of chain fusion (every
+        command dispatches as its own task). Returns — and records on
+        ``self.backend`` — the effective settings; an unknown backend
+        raises :class:`AlchemistError` listing what the engine offers."""
+        self._check_alive()
+        options: dict = {}
+        if backend is not None:
+            options["backend"] = backend
+        if fusion is not None:
+            options["fusion"] = fusion
+        res = protocol.decode_result(self.engine.configure(
+            protocol.encode_configure(protocol.Configure(
+                session=self.session, options=options))))
+        if res.error:
+            raise AlchemistError(res.error)
+        self.backend = res.values["backend"]
+        return res.values
 
     def _describe(self, library: str = "") -> dict:
         """Wire-level catalog query; returns ``values["libraries"]``."""

@@ -53,6 +53,16 @@ DCN_BW = 25e9                             # bytes/s per host, cross-slice
 CHUNK_LATENCY_S = 2.5e-4                  # per-chunk fixed cost, seconds
 PIPELINE_FRACTION = 0.35                  # overlap of send with re-layout
 
+# ---- task-dispatch constant (backend fusion model) ----
+# Modeled fixed cost of dispatching ONE scheduler task: queue insertion,
+# hazard-edge bookkeeping, worker wakeup, result encode, and the XLA
+# dispatch itself. This is what chain fusion amortizes: an N-op chain
+# executed eagerly pays it N times, fused it pays it once (plus the same
+# N submit crossings the lazy client already pays either way).
+# Ballpark of the measured per-task scheduler overhead on this container;
+# benchmarks print measured numbers next to anything modeled with it.
+TASK_DISPATCH_S = 2.0e-4
+
 
 def socket_transfer_seconds(nbytes: int, client_procs: int,
                             engine_procs: int) -> float:
@@ -269,12 +279,25 @@ def percentile(values, q: float) -> float:
 class TaskRecord:
     """Accounting for one scheduled command: which session ran what, how
     long it waited in the queue (dependencies + worker availability) vs
-    how long it executed, and its terminal state."""
+    how long it executed, and its terminal state.
+
+    Backend-ABI fields: ``fused_ops`` is how many logical commands this
+    task executed (1 normally; N for the lead task of a fused chain);
+    ``absorbed`` marks a command that was *claimed into* another task's
+    fused program instead of dispatching on its own (its row keeps the
+    per-command accounting, but it cost no dispatch); ``relayouts``/
+    ``relayout_bytes`` count the explicit layout redistributions the
+    engine inserted because an operand arrived in a layout the backend
+    implementation does not accept."""
     session: int
     label: str                    # "library.routine"
     state: str                    # DONE | FAILED
     wait_s: float
     exec_s: float
+    fused_ops: int = 1
+    absorbed: bool = False
+    relayouts: int = 0
+    relayout_bytes: int = 0
 
     @property
     def latency_s(self) -> float:
@@ -292,12 +315,42 @@ class TaskLog:
         self._lock = threading.Lock()
 
     def record(self, session: int, label: str, state: str,
-               wait_s: float, exec_s: float) -> TaskRecord:
+               wait_s: float, exec_s: float, fused_ops: int = 1,
+               absorbed: bool = False, relayouts: int = 0,
+               relayout_bytes: int = 0) -> TaskRecord:
         rec = TaskRecord(session=session, label=label, state=state,
-                         wait_s=wait_s, exec_s=exec_s)
+                         wait_s=wait_s, exec_s=exec_s,
+                         fused_ops=int(fused_ops), absorbed=bool(absorbed),
+                         relayouts=int(relayouts),
+                         relayout_bytes=int(relayout_bytes))
         with self._lock:
             self.records.append(rec)
         return rec
+
+    def stats(self) -> dict:
+        """Engine-wide dispatch/fusion/relayout accounting — what the
+        fusion benchmark and tests assert on.
+
+        ``commands`` counts logical routine invocations (every recorded
+        row); ``dispatched`` counts tasks that actually ran on a worker
+        (absorbed rows excluded); ``fused_tasks`` of those executed more
+        than one command; ``ops_per_task`` is the amortization ratio
+        (``commands / dispatched`` — 1.0 means fusion never engaged)."""
+        with self._lock:
+            recs = list(self.records)
+        dispatched = [r for r in recs if not r.absorbed]
+        fused = [r for r in dispatched if r.fused_ops > 1]
+        return {
+            "commands": len(recs),
+            "dispatched": len(dispatched),
+            "absorbed": len(recs) - len(dispatched),
+            "fused_tasks": len(fused),
+            "fused_ops": sum(r.fused_ops for r in fused),
+            "ops_per_task": (len(recs) / len(dispatched))
+            if dispatched else 0.0,
+            "relayouts": sum(r.relayouts for r in recs),
+            "relayout_bytes": sum(r.relayout_bytes for r in recs),
+        }
 
     def session_summary(self, session: int) -> dict:
         """Latency summary for one session: task counts, total/mean

@@ -31,7 +31,22 @@ The engine owns
   returns its cached output handles instantly (DONE-on-submit fast path,
   guarded against in-flight writers), and a re-upload of resident content
   short-circuits to a handle alias. ``cache_log`` carries the per-session
-  hit/miss/bytes-saved accounting.
+  hit/miss/bytes-saved accounting;
+* an *execution layer* behind the pluggable **Backend ABI**
+  (``core/backends``) — the engine never calls a library function
+  directly: each command becomes an execution *plan* compiled through
+  the session's selected backend (``configure`` endpoint; ``jax`` by
+  default, plain-numpy ``reference`` for debugging). The engine owns
+  handle→array materialization, **layout negotiation** (an operand in a
+  layout the backend implementation does not accept gets an explicit
+  relayout, counted in ``task_log``), and minting every output handle
+  through the distributed-sharding put path — so no routine can return
+  a host-materialized array that silently drops the engine layout. When
+  a worker picks up the head of a dependency chain submitted in one
+  burst, the engine *claims* the whole fusible chain from the scheduler
+  and the jax backend compiles it into a single ``jax.jit`` program —
+  one dispatch for N commands, chain-internal values never materialized
+  between steps (``task_log.stats()`` reports the fused-ops ratio).
 
 On this CPU container the worker mesh is however many devices exist (1);
 the same code lowers onto a real multi-chip engine mesh unchanged — the
@@ -52,9 +67,12 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import backends as backend_registry
 from repro.core import cache as caching, protocol, scheduler as scheduling
+from repro.core.backends import base as backend_base
 from repro.core.costmodel import CacheLog, TaskLog, TransferLog
-from repro.core.handles import MatrixHandle
+from repro.core.handles import BLOCK2D, LAYOUTS, REPLICATED, ROWBLOCK, \
+    MatrixHandle
 from repro.core.libraries import spec as specs
 
 SYSTEM_SESSION = 0
@@ -95,6 +113,11 @@ class Session:
     owned: set[int] = dataclasses.field(default_factory=set)
     connected_at: float = dataclasses.field(default_factory=time.time)
     commands: int = 0
+    # execution configuration (the ``configure`` endpoint): which
+    # registered backend runs this session's commands ("" = the engine
+    # default), and whether its burst-submitted chains may fuse
+    backend: str = ""
+    fusion: bool = True
 
 
 @dataclasses.dataclass
@@ -120,6 +143,9 @@ class _Store:
     last_use: int = 0
     host: Optional[np.ndarray] = None
     sharding: Any = None
+    # the store's authoritative distributed layout (handles carry a
+    # snapshot; overwrite can change it): one of handles.LAYOUTS
+    layout: str = REPLICATED
 
 
 @dataclasses.dataclass
@@ -182,17 +208,35 @@ class AlchemistEngine:
     and transparently reload on next use. ``None`` disables eviction.
     ``scheduler_workers`` sizes the dispatch worker pool: different
     sessions' commands run concurrently up to this width (1 reproduces the
-    old strictly-serialized dispatch).
+    old strictly-serialized dispatch). ``backend`` names the default
+    execution backend for sessions that never ``configure`` one;
+    ``fuse_chains=False`` disables chain claiming engine-wide (every
+    command dispatches as its own task — the pre-ABI behaviour).
     """
 
     def __init__(self, mesh: Optional[Mesh] = None,
                  transfer_log: Optional[TransferLog] = None,
                  memory_budget_bytes: Optional[int] = None,
                  scheduler_workers: int = 4,
-                 cache_entries: int = 256):
+                 cache_entries: int = 256,
+                 backend: str = backend_registry.DEFAULT_BACKEND,
+                 fuse_chains: bool = True):
         self.mesh = mesh if mesh is not None else make_engine_mesh()
         self.num_workers = self.mesh.devices.size
         self.memory_budget_bytes = memory_budget_bytes
+        # the pluggable execution layer: per-engine backend instances
+        # (compile caches must not leak across engines)
+        self.backends = backend_registry.create_backends()
+        if backend not in self.backends:
+            raise backend_registry.BackendError(
+                f"unknown execution backend {backend!r} (available: "
+                f"{', '.join(sorted(self.backends))})")
+        self.default_backend = backend
+        self.fuse_chains = fuse_chains
+        # task id -> execution accounting (fused op count, relayouts);
+        # written by workers under the state lock, drained by
+        # _record_task at completion
+        self._task_meta: dict[int, dict] = {}
         self._entries: dict[int, _Entry] = {}
         self._stores: dict[int, _Store] = {}
         self._store_ids = itertools.count(1)
@@ -281,6 +325,7 @@ class AlchemistEngine:
         construct a new one to continue. Idempotent."""
         self.scheduler.shutdown()
         with self._state_lock:
+            self._task_meta.clear()
             if self.cache is not None:
                 self.cache.clear()
             for sid in list(self._sessions):
@@ -303,7 +348,8 @@ class AlchemistEngine:
             if hs.action == protocol.CONNECT:
                 sess = self.connect(hs.client)
                 return protocol.encode_result(protocol.Result(
-                    values={"session": sess.id, "workers": self.num_workers},
+                    values={"session": sess.id, "workers": self.num_workers,
+                            "backend": self.default_backend},
                     session=sess.id))
             if hs.action != protocol.DISCONNECT:
                 raise ValueError(f"unknown handshake action {hs.action!r}")
@@ -385,20 +431,87 @@ class AlchemistEngine:
             return protocol.encode_result(protocol.Result(
                 values={}, error=f"{type(e).__name__}: {e}"))
 
+    # ---- session configuration (backend selection, §3.1.1 resource grant) ----
+    def configure(self, wire: bytes) -> bytes:
+        """Protocol endpoint for session configuration: select the
+        execution backend this session's commands run in (validated
+        against the registry) and/or toggle chain fusion. Replies with
+        the *effective* settings; unknown option keys are an error — a
+        typo must not silently configure nothing."""
+        with self._state_lock:
+            self.endpoint_counts["configure"] += 1
+        try:
+            cfg = protocol.decode_configure(wire)
+            if cfg.session == SYSTEM_SESSION:
+                raise ValueError(
+                    "the system session cannot be configured; connect() "
+                    "a session first")
+            sess = self.session(cfg.session)     # raises if unknown
+            unknown = sorted(set(cfg.options) - {"backend", "fusion"})
+            if unknown:
+                raise ValueError(
+                    f"unknown configure option(s) {unknown}; supported: "
+                    "backend, fusion")
+            # validate every option BEFORE mutating anything: a request
+            # that errors must not half-apply (the client treats an
+            # error reply as "nothing changed")
+            if "backend" in cfg.options:
+                name = cfg.options["backend"]
+                if name not in self.backends:
+                    raise backend_registry.BackendError(
+                        f"unknown execution backend {name!r} "
+                        f"(available: {', '.join(sorted(self.backends))})")
+            if "fusion" in cfg.options and \
+                    not isinstance(cfg.options["fusion"], bool):
+                raise TypeError("configure option 'fusion' must be a bool")
+            with self._state_lock:
+                if "backend" in cfg.options:
+                    sess.backend = cfg.options["backend"]
+                if "fusion" in cfg.options:
+                    sess.fusion = cfg.options["fusion"]
+                effective = {
+                    "session": sess.id,
+                    "backend": sess.backend or self.default_backend,
+                    "fusion": sess.fusion,
+                }
+            return protocol.encode_result(protocol.Result(
+                values=effective, session=cfg.session))
+        except Exception as e:
+            return protocol.encode_result(protocol.Result(
+                values={}, error=f"{type(e).__name__}: {e}"))
+
+    def _session_backend(self, sess: Session) -> backend_base.ExecutionBackend:
+        return self.backends[sess.backend or self.default_backend]
+
+    def _backend_name(self, session_id: int) -> str:
+        sess = self._sessions.get(session_id)
+        if sess is None or not sess.backend:
+            return self.default_backend
+        return sess.backend
+
     # ---- handle lifecycle (bindings over refcounted stores) ----
     def put(self, array: jax.Array, name: Optional[str] = None,
             session: int = SYSTEM_SESSION,
-            fingerprint: Optional[str] = None) -> MatrixHandle:
+            fingerprint: Optional[str] = None,
+            layout: Optional[str] = None) -> MatrixHandle:
         """Register a device array under a fresh handle owned by
         ``session`` (refcount 1), evicting LRU stores if over budget.
 
         ``fingerprint`` content-addresses the store (the transfer layer
         passes the chunk-hash combination so later uploads of equal bytes
         can alias instead of crossing); ``None`` mints an opaque version
-        — correct, just never dedup'd."""
+        — correct, just never dedup'd. ``layout`` overrides the layout
+        tag (tests simulating a foreign distribution use this); ``None``
+        derives it from the array's actual sharding — the handle's tag
+        is real, not decorative."""
         with self._state_lock:
             sess = self.session(session)
-            handle = MatrixHandle.fresh(array.shape, array.dtype, name=name)
+            lay = layout if layout is not None else self.layout_of(array)
+            if lay not in LAYOUTS:
+                raise ValueError(f"unknown layout {lay!r} "
+                                 f"(one of {LAYOUTS})")
+            handle = MatrixHandle.fresh(array.shape, array.dtype,
+                                        layout=lay, name=name)
             nbytes = int(np.prod(array.shape)) * array.dtype.itemsize
             fp = fingerprint or f"v:{next(self._clock)}"
             store_id = next(self._store_ids)
@@ -406,7 +519,8 @@ class AlchemistEngine:
                 array=array, nbytes=nbytes, shape=tuple(array.shape),
                 dtype=str(array.dtype), fingerprint=fp,
                 last_use=next(self._clock),
-                sharding=getattr(array, "sharding", None))
+                sharding=getattr(array, "sharding", None),
+                layout=lay)
             self._by_fingerprint.setdefault(fp, store_id)
             self._entries[handle.id] = _Entry(store=store_id,
                                               session=session)
@@ -461,6 +575,7 @@ class AlchemistEngine:
                     f"{tuple(array.shape)}/{array.dtype}")
             store = self._stores[entry.store]
             fp = f"v:{next(self._clock)}"
+            lay = self.layout_of(array)
             if store.refs > 1:                          # copy-on-write
                 store.refs -= 1
                 store_id = next(self._store_ids)
@@ -468,7 +583,8 @@ class AlchemistEngine:
                     array=array, nbytes=store.nbytes,
                     shape=tuple(array.shape), dtype=str(array.dtype),
                     fingerprint=fp, last_use=next(self._clock),
-                    sharding=getattr(array, "sharding", None))
+                    sharding=getattr(array, "sharding", None),
+                    layout=lay)
                 entry.store = store_id
                 self._enforce_budget(keep=store_id)
             else:
@@ -479,6 +595,7 @@ class AlchemistEngine:
                 store.array = array
                 store.host = None
                 store.sharding = getattr(array, "sharding", store.sharding)
+                store.layout = lay
                 store.last_use = next(self._clock)
                 self._enforce_budget(keep=entry.store)
             self._by_fingerprint.setdefault(fp, entry.store)
@@ -582,7 +699,8 @@ class AlchemistEngine:
         store reference; the alias has its own handle refcount)."""
         store = self._stores[store_id]
         sess = self.session(session)
-        handle = MatrixHandle.fresh(store.shape, store.dtype, name=name)
+        handle = MatrixHandle.fresh(store.shape, store.dtype,
+                                    layout=store.layout, name=name)
         store.refs += 1
         self._entries[handle.id] = _Entry(store=store_id, session=session)
         sess.owned.add(handle.id)
@@ -675,7 +793,11 @@ class AlchemistEngine:
             inputs.append(h.id)
             return self._stores[entry.store].fingerprint
 
-        key = caching.routine_key(cmd.library, cmd.routine, cmd.args, fp_of)
+        # keys are scoped by the session's execution backend: a reference
+        # session must never be served a jax-computed result (recomputing
+        # with the other implementation is its whole point)
+        key = caching.routine_key(cmd.library, cmd.routine, cmd.args, fp_of,
+                                  scope=self._backend_name(cmd.session))
         if key is None or not inputs:
             return None
         return key, tuple(inputs)
@@ -805,6 +927,56 @@ class AlchemistEngine:
                                               *(None,) * (len(shape) - 1)))
         return NamedSharding(self.mesh, P(*(None,) * len(shape)))
 
+    def sharding_for(self, shape, layout: str) -> NamedSharding:
+        """The device sharding realizing a declared layout for ``shape``
+        on this engine's mesh (the relayout target). ``block2d`` is the
+        Elemental 2D block-cyclic analogue; on the 1-axis worker mesh it
+        projects to column blocks. A layout whose divisibility the shape
+        cannot satisfy falls back to replicated — always valid, just not
+        distributed."""
+        ndim = len(shape)
+        if layout == ROWBLOCK and ndim >= 1 and \
+                shape[0] % self.num_workers == 0:
+            return NamedSharding(self.mesh,
+                                 P("workers", *(None,) * (ndim - 1)))
+        if layout == BLOCK2D and ndim >= 2 and \
+                shape[-1] % self.num_workers == 0:
+            return NamedSharding(self.mesh,
+                                 P(*(None,) * (ndim - 1), "workers"))
+        if layout == BLOCK2D and ndim == 1 and \
+                shape[0] % self.num_workers == 0:
+            return NamedSharding(self.mesh, P("workers"))
+        return NamedSharding(self.mesh, P(*(None,) * ndim))
+
+    def layout_of(self, array) -> str:
+        """Derive the layout tag from an array's actual device sharding —
+        the single source of truth behind every handle's ``layout``.
+        Arrays with no named sharding (host arrays, single-device
+        results never resharded) are a full copy wherever they live:
+        ``replicated``."""
+        sharding = getattr(array, "sharding", None)
+        spec = getattr(sharding, "spec", None)
+        if spec is None:
+            return REPLICATED
+        axes = list(spec)
+        def on_workers(entry):
+            if entry is None:
+                return False
+            if isinstance(entry, (tuple, list)):
+                return "workers" in entry
+            return entry == "workers"
+        if axes and on_workers(axes[0]):
+            return ROWBLOCK
+        if any(on_workers(a) for a in axes[1:]):
+            return BLOCK2D
+        return REPLICATED
+
+    def layout(self, handle: MatrixHandle) -> str:
+        """The authoritative layout of the store a handle names (the
+        handle's own tag is a snapshot from mint time)."""
+        with self._state_lock:
+            return self._stores[self._entry(handle).store].layout
+
     # ---- dispatch (async task scheduler over the command channel) ----
     def run(self, wire_command: bytes) -> bytes:
         """Execute one serialized Command; returns a serialized Result.
@@ -882,9 +1054,10 @@ class AlchemistEngine:
         barrier = cmd.library == ENGINE_LIBRARY
         try:
             task = self.scheduler.submit(
-                lambda _t, c=cmd: self._run_task(c), session=cmd.session,
+                lambda t, c=cmd: self._run_task(c, t), session=cmd.session,
                 reads=reads, writes=writes, data_deps=data_deps,
-                barrier=barrier, label=f"{cmd.library}.{cmd.routine}")
+                barrier=barrier, label=f"{cmd.library}.{cmd.routine}",
+                payload=cmd)
         except Exception as e:   # e.g. scheduler shut down: stay on-wire
             return protocol.encode_result(protocol.Result(
                 values={}, error=f"{type(e).__name__}: {e}",
@@ -999,14 +1172,43 @@ class AlchemistEngine:
 
         return dataclasses.replace(cmd, args=resolve(cmd.args))
 
-    def _run_task(self, cmd: protocol.Command) -> bytes:
+    def _lookup_routine(self, cmd: protocol.Command):
+        """The library's cataloged callable for a command — the spec
+        carrier and legacy-ALI fallback, *never* invoked directly by the
+        engine for backend-registered routines. Raises
+        LibraryNotRegistered with the pre-ABI messages."""
+        if cmd.library == ENGINE_LIBRARY:
+            fn = self._BUILTINS.get(cmd.routine)
+            if fn is None:
+                raise LibraryNotRegistered(
+                    f"routine {cmd.routine!r} not in {ENGINE_LIBRARY!r}")
+            return fn
+        lib = self._libraries.get(cmd.library)
+        if lib is None:
+            raise LibraryNotRegistered(
+                f"library {cmd.library!r} not registered")
+        fn = lib.get(cmd.routine)
+        if fn is None:
+            raise LibraryNotRegistered(
+                f"routine {cmd.routine!r} not in {cmd.library!r}")
+        return fn
+
+    def _run_task(self, cmd: protocol.Command,
+                  task: Optional[scheduling.Task] = None) -> bytes:
         """Task body run on a scheduler worker: resolve deferred args,
-        consult the routine cache, dispatch the routine, memoize and
-        encode the Result. A total exception barrier converts every
-        failure (unresolvable deferred, routine raising, unserializable
-        outputs) into an encoded error Result raised as TaskFailure, so
-        the task lands in FAILED with the error available to waiters —
-        and the worker pool survives.
+        consult the routine cache, build the execution plan, dispatch it
+        through the session's backend, memoize and encode the Result. A
+        total exception barrier converts every failure (unresolvable
+        deferred, routine raising, unserializable outputs) into an
+        encoded error Result raised as TaskFailure, so the task lands in
+        FAILED with the error available to waiters — and the worker pool
+        survives.
+
+        When the command's implementation is fusible and the session
+        allows it, the engine *claims* the chain of queued commands
+        depending only on this task (``scheduler.claim_chain``) and
+        executes the whole chain as one fused backend program — see
+        :meth:`_run_fused`.
 
         The cache lookup here needs no hazard guard: by dispatch time
         every write this task was ordered after has completed (its edges
@@ -1016,20 +1218,13 @@ class AlchemistEngine:
         try:
             cmd = self._resolve_deferred(cmd)
             sess = self.session(cmd.session)
+            fn = self._lookup_routine(cmd)
+            backend = self._session_backend(sess)
             if cmd.library == ENGINE_LIBRARY:
-                fn = self._BUILTINS.get(cmd.routine)
-                if fn is None:
-                    raise LibraryNotRegistered(
-                        f"routine {cmd.routine!r} not in {ENGINE_LIBRARY!r}")
+                impl = backend_base.RoutineImpl(fn=fn, kind=backend_base.ALI)
             else:
-                lib = self._libraries.get(cmd.library)
-                if lib is None:
-                    raise LibraryNotRegistered(
-                        f"library {cmd.library!r} not registered")
-                fn = lib.get(cmd.routine)
-                if fn is None:
-                    raise LibraryNotRegistered(
-                        f"routine {cmd.routine!r} not in {cmd.library!r}")
+                impl = backend.routine_impl(cmd.library, cmd.routine,
+                                            fallback=fn)
             info = None
             if self.cache is not None:
                 with self._state_lock:
@@ -1039,11 +1234,23 @@ class AlchemistEngine:
                         if entry is not None:
                             return protocol.encode_result(
                                 self._serve_hit(info[0], entry, cmd))
+            chain: list[scheduling.Task] = []
+            if (task is not None and self.fuse_chains and sess.fusion
+                    and backend.supports_fusion and impl.fusible
+                    and impl.kind == backend_base.ARRAY):
+                chain = self.scheduler.claim_chain(
+                    task.id, self._fusible_predicate(backend))
+            if chain:
+                return self._run_fused(task, cmd, impl, chain, backend,
+                                       sess)
+            meta = {"ops": 1, "relayouts": 0, "relayout_bytes": 0}
             sess.commands += 1
-            view = SessionView(self, sess)
             t0 = time.perf_counter()
-            values = fn(view, **cmd.args)
+            values = self._execute_step(backend, impl, cmd, sess, meta)
             elapsed = time.perf_counter() - t0
+            if task is not None:
+                with self._state_lock:
+                    self._task_meta[task.id] = meta
             if info is not None:
                 self._cache_store_result(info[0], info[1], cmd, values,
                                          elapsed)
@@ -1060,6 +1267,337 @@ class AlchemistEngine:
                 protocol.encode_result(protocol.Result(
                     values={}, error=msg, session=cmd.session)), msg)
 
+    # ---- backend execution (the plan layer) ----
+    def _execute_step(self, backend: backend_base.ExecutionBackend,
+                      impl: backend_base.RoutineImpl,
+                      cmd: protocol.Command, sess: Session,
+                      meta: dict) -> dict:
+        """Run one command through the ABI: materialize handle args
+        (negotiating layout), invoke the implementation, and mint output
+        handles through the distributed put path. Legacy ALI impls keep
+        the old calling convention — the routine does its own
+        ``engine.put`` via the session view."""
+        if impl.kind == backend_base.ALI:
+            view = SessionView(self, sess)
+            return impl.fn(view, **cmd.args)
+        kwargs = {}
+        for k, v in cmd.args.items():
+            if isinstance(v, MatrixHandle):
+                kwargs[k] = self._materialize_arg(v, cmd.session, backend,
+                                                  impl, meta)
+            else:
+                kwargs[k] = v
+        outs = impl.fn(**kwargs)
+        return self._bind_outputs(backend, outs, cmd)
+
+    def _materialize_arg(self, handle: MatrixHandle, session: int,
+                         backend: backend_base.ExecutionBackend,
+                         impl: backend_base.RoutineImpl, meta: dict):
+        """Handle -> backend-native array, inserting an explicit relayout
+        when the store's layout is not one the implementation accepts
+        (the Elemental redistribution step, made visible and charged to
+        the task's accounting)."""
+        arr = self.get(handle, session=session)
+        with self._state_lock:
+            lay = self._stores[self._entry(handle).store].layout
+        if impl.accepts is not None and lay not in impl.accepts:
+            target = impl.relayout_to
+            arr = jax.device_put(arr, self.sharding_for(arr.shape, target))
+            meta["relayouts"] += 1
+            meta["relayout_bytes"] += int(np.prod(arr.shape)) * \
+                arr.dtype.itemsize
+        return backend.to_native(arr)
+
+    def _bind_outputs(self, backend: backend_base.ExecutionBackend,
+                      outs: dict, cmd: protocol.Command) -> dict:
+        """Mint handles for a step's array outputs — every one lands
+        through :meth:`_put_output`'s dist-sharding path, so backend
+        results (including host-side reference results and transposes
+        that lost their sharding) re-enter the engine layout. Scalars
+        pass through untouched."""
+        if not isinstance(outs, dict):
+            raise TypeError(
+                f"{cmd.library}.{cmd.routine} implementation must return "
+                f"a dict of outputs, got {type(outs).__name__}")
+        arrays = [k for k, v in outs.items() if backend.is_array(v)]
+        arg_name = cmd.args.get("name")
+        values = {}
+        for k, v in outs.items():
+            if backend.is_array(v):
+                name = arg_name if (len(arrays) == 1
+                                    and isinstance(arg_name, str)) \
+                    else f"{cmd.routine}.{k}"
+                values[k] = self._put_output(v, cmd.session, name=name)
+            else:
+                values[k] = v
+        return values
+
+    def _put_output(self, value, session: int,
+                    name: Optional[str] = None) -> MatrixHandle:
+        """The single exit point for routine outputs: land the array in
+        the engine's distributed layout (``dist_sharding``) and register
+        it. This is what guarantees no routine output ever drops the
+        engine sharding — the systematic fix for the old
+        host-materialized ``transpose``/``add`` results."""
+        target = self.dist_sharding(np.shape(value))
+        if not isinstance(value, jax.Array) or \
+                getattr(value, "sharding", None) != target:
+            value = jax.device_put(value, target)
+        return self.put(value, name=name, session=session)
+
+    def _fusible_predicate(self, backend: backend_base.ExecutionBackend):
+        """Claim filter for :meth:`scheduler.claim_chain`: a queued task
+        is fusible when it carries a decoded Command for a *loaded*
+        routine this backend registered as fusible (legacy ALI fallbacks
+        never are). Runs under the scheduler lock, so it must not take
+        the engine state lock (``pending_writers`` is called under the
+        state lock — the reverse order would deadlock); the two dict
+        reads below are single lookups, safe without it."""
+        def ok(t: scheduling.Task) -> bool:
+            c = t.payload
+            if not isinstance(c, protocol.Command) or \
+                    c.library == ENGINE_LIBRARY:
+                return False
+            if self._libraries.get(c.library, {}).get(c.routine) is None:
+                return False      # unloaded: must fail like eager dispatch
+            return backend.fusible(c.library, c.routine)
+        return ok
+
+    def _run_fused(self, task: scheduling.Task, cmd: protocol.Command,
+                   impl: backend_base.RoutineImpl,
+                   chain: list[scheduling.Task],
+                   backend: backend_base.ExecutionBackend,
+                   sess: Session) -> bytes:
+        """Execute a claimed chain as ONE backend program (the headline
+        optimization): build a multi-step plan where chain-internal
+        deferred handles become :class:`StepRef` SSA edges, compile it
+        through the backend (the jax backend emits a single ``jax.jit``
+        program), then mint every step's outputs and complete the
+        claimed tasks in chain order.
+
+        Caching: each step's result is stored under the *same* canonical
+        key — and therefore mints the same derived output fingerprints —
+        as op-by-op execution would (keys hash content + params, not
+        dispatch shape), so memoization composes identically fused or
+        not. Per-step cache *lookups* are skipped (the chain recomputes);
+        the lead's own lookup already ran in :meth:`_run_task`.
+
+        If compilation or the fused run fails, fall back to sequential
+        per-step execution with eager failure semantics: steps before
+        the failure still succeed, the failing step and everything
+        data-dependent on it fail — exactly what unfused dispatch would
+        have produced."""
+        cmds = [cmd] + [t.payload for t in chain]
+        task_index = {task.id: 0}
+        for i, t in enumerate(chain):
+            task_index[t.id] = i + 1
+        meta = {"ops": len(cmds), "relayouts": 0, "relayout_bytes": 0}
+
+        impls = [impl]
+        for c in cmds[1:]:
+            impls.append(backend.routine_impl(c.library, c.routine))
+
+        inputs: dict[str, Any] = {}
+        slot_of: dict[int, str] = {}
+
+        def plan_arg(v, step_impl):
+            if isinstance(v, MatrixHandle):
+                slot = slot_of.get(v.id)
+                if slot is None:
+                    # positional slot names: the same chain *shape* from
+                    # another tenant (different handle IDs, same
+                    # structure) reuses the backend's compiled program
+                    slot = f"i{len(slot_of)}"
+                    inputs[slot] = self._materialize_arg(
+                        v, cmd.session, backend, step_impl, meta)
+                    slot_of[v.id] = slot
+                return backend_base.Input(slot)
+            if isinstance(v, protocol.DeferredHandle):
+                j = task_index.get(v.task)
+                if j is not None:
+                    return backend_base.StepRef(j, v.key)
+                # external producer: terminal by claim construction —
+                # resolve to its real handle, then treat as an input
+                producer = self.scheduler.task(v.task)
+                res = protocol.decode_result(producer.result)
+                out = res.values.get(v.key)
+                if not isinstance(out, MatrixHandle):
+                    raise KeyError(
+                        f"task #{v.task} produced no handle named "
+                        f"{v.key!r} (outputs: {sorted(res.values)})")
+                return plan_arg(out, step_impl)
+            return v
+
+        try:
+            steps = []
+            for c, step_impl in zip(cmds, impls):
+                steps.append(backend_base.PlanStep(
+                    library=c.library, routine=c.routine,
+                    args={k: plan_arg(v, step_impl)
+                          for k, v in c.args.items()},
+                    impl=step_impl))
+            plan = backend_base.ExecutionPlan(steps=steps)
+            program = backend.compile(plan)
+            t0 = time.perf_counter()
+            outs_list = program(inputs)
+            elapsed = time.perf_counter() - t0
+        except Exception:
+            # fused lowering/execution failed; re-run with eager,
+            # per-step failure semantics (implementations are pure, so
+            # nothing partial leaked)
+            return self._run_chain_unfused(task, cmds, chain, backend,
+                                           sess)
+
+        share = elapsed / len(cmds)
+        lead_wire: Optional[bytes] = None
+        minted: dict[int, dict] = {}     # chain position -> values
+        try:
+            for i, (c, outs) in enumerate(zip(cmds, outs_list)):
+                sess.commands += 1
+                resolved = dataclasses.replace(
+                    c, args=self._chain_concrete_args(c, task_index,
+                                                      minted))
+                values = self._bind_outputs(backend, outs, resolved)
+                minted[i] = values
+                if self.cache is not None:
+                    with self._state_lock:
+                        step_info = self._cache_info(resolved)
+                    if step_info is not None:
+                        self._cache_store_result(
+                            step_info[0], step_info[1], resolved, values,
+                            share)
+                wire = protocol.encode_result(protocol.Result(
+                    values=values, elapsed=share, session=c.session))
+                if i == 0:
+                    with self._state_lock:
+                        self._task_meta[task.id] = meta
+                    lead_wire = wire
+                else:
+                    t = chain[i - 1]
+                    with self._state_lock:
+                        self._task_meta[t.id] = {"absorbed": True}
+                    self.scheduler.finish_claimed(t.id, wire)
+        except Exception as e:
+            # Claimed tasks were promised a finish_claimed call — a
+            # delivery failure (impl returned outputs that don't match
+            # its spec, unserializable values, ...) must not strand them
+            # in RUNNING forever. Fail every not-yet-completed claimed
+            # task; the lead keeps its own outcome (DONE if its step
+            # already delivered — eager semantics — FAILED otherwise,
+            # via _run_task's barrier).
+            msg = f"{type(e).__name__}: {e}"
+            err_wire = protocol.encode_result(protocol.Result(
+                values={}, error=msg, session=cmd.session))
+            for t in chain:
+                try:
+                    self.scheduler.finish_claimed(
+                        t.id, err_wire, state=scheduling.FAILED,
+                        error=msg)
+                except KeyError:
+                    pass        # this one already completed
+            if lead_wire is None:
+                raise
+        return lead_wire
+
+    def _chain_concrete_args(self, c: protocol.Command,
+                             task_index: dict[int, int],
+                             minted: dict[int, dict]) -> dict:
+        """Rewrite a chain command's args with the handles its chain-
+        internal deferred refs resolved to (the outputs were just
+        minted) — what cache keying and hazard-truthful Results need."""
+        def concrete(v):
+            if isinstance(v, protocol.DeferredHandle):
+                j = task_index.get(v.task)
+                if j is not None:
+                    out = minted.get(j, {}).get(v.key)
+                    if not isinstance(out, MatrixHandle):
+                        raise KeyError(
+                            f"chain step {j} produced no handle named "
+                            f"{v.key!r}")
+                    return out
+                producer = self.scheduler.task(v.task)
+                res = protocol.decode_result(producer.result)
+                return res.values[v.key]
+            if isinstance(v, dict):
+                return {k: concrete(x) for k, x in v.items()}
+            if isinstance(v, list):
+                return [concrete(x) for x in v]
+            return v
+        return {k: concrete(v) for k, v in c.args.items()}
+
+    def _run_chain_unfused(self, task: scheduling.Task,
+                           cmds: list[protocol.Command],
+                           chain: list[scheduling.Task],
+                           backend: backend_base.ExecutionBackend,
+                           sess: Session) -> bytes:
+        """Sequential fallback for a claimed chain whose fused execution
+        failed: run each step eagerly (same per-step semantics as
+        normal dispatch), fail the first broken step, and fail every
+        later step as an upstream casualty — then surface the lead's
+        own outcome to the worker."""
+        task_ids = [task.id] + [t.id for t in chain]
+        task_index = {tid: i for i, tid in enumerate(task_ids)}
+        minted: dict[int, dict] = {}
+        failed_at: Optional[int] = None
+        failed_msg = ""
+        lead_wire: Optional[bytes] = None
+        lead_error: Optional[str] = None
+        for i, c in enumerate(cmds):
+            if failed_at is not None:
+                msg = (f"upstream task #{task_ids[failed_at]} failed: "
+                       f"{failed_msg}")
+                wire = protocol.encode_result(protocol.Result(
+                    values={}, error=msg, session=c.session))
+                self.scheduler.finish_claimed(chain[i - 1].id, wire,
+                                              state=scheduling.FAILED,
+                                              error=msg)
+                continue
+            try:
+                resolved = dataclasses.replace(
+                    c, args=self._chain_concrete_args(c, task_index,
+                                                      minted))
+                impl_i = backend.routine_impl(
+                    resolved.library, resolved.routine,
+                    fallback=self._lookup_routine(resolved))
+                meta_i = {"ops": 1, "relayouts": 0, "relayout_bytes": 0}
+                sess.commands += 1
+                t0 = time.perf_counter()
+                values = self._execute_step(backend, impl_i, resolved,
+                                            sess, meta_i)
+                elapsed = time.perf_counter() - t0
+                minted[i] = values
+                if i > 0:       # claimed steps never dispatched on a worker
+                    meta_i["absorbed"] = True
+                with self._state_lock:
+                    self._task_meta[task_ids[i]] = meta_i
+                if self.cache is not None:
+                    with self._state_lock:
+                        info_i = self._cache_info(resolved)
+                    if info_i is not None:
+                        self._cache_store_result(info_i[0], info_i[1],
+                                                 resolved, values, elapsed)
+                wire = protocol.encode_result(protocol.Result(
+                    values=values, elapsed=elapsed, session=c.session))
+                if i == 0:
+                    lead_wire = wire
+                else:
+                    self.scheduler.finish_claimed(chain[i - 1].id, wire)
+            except Exception as e:
+                failed_at = i
+                failed_msg = f"{type(e).__name__}: {e}"
+                wire = protocol.encode_result(protocol.Result(
+                    values={}, error=failed_msg, session=c.session))
+                if i == 0:
+                    lead_wire = wire
+                    lead_error = failed_msg
+                else:
+                    self.scheduler.finish_claimed(
+                        chain[i - 1].id, wire, state=scheduling.FAILED,
+                        error=failed_msg)
+        if lead_error is not None:
+            raise scheduling.TaskFailure(lead_wire, lead_error)
+        return lead_wire
+
     # ---- engine builtins (wire-reachable under ENGINE_LIBRARY) ----
     @specs.routine(outputs=())
     def _builtin_load_library(view, name: str, module: str):
@@ -1074,7 +1612,15 @@ class AlchemistEngine:
     _BUILTINS = {"load_library": _builtin_load_library}
 
     def _record_task(self, task: scheduling.Task) -> None:
-        """Scheduler completion hook -> per-task cost accounting."""
+        """Scheduler completion hook -> per-task cost accounting,
+        including the backend-ABI execution metadata (fused op count,
+        absorbed flag, relayout count/bytes) staged by the task body."""
+        with self._state_lock:
+            meta = self._task_meta.pop(task.id, None) or {}
         self.task_log.record(
             session=task.session, label=task.label, state=task.state,
-            wait_s=task.wait_s, exec_s=task.exec_s)
+            wait_s=task.wait_s, exec_s=task.exec_s,
+            fused_ops=meta.get("ops", 1),
+            absorbed=bool(meta.get("absorbed", False)),
+            relayouts=meta.get("relayouts", 0),
+            relayout_bytes=meta.get("relayout_bytes", 0))

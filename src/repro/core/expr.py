@@ -278,6 +278,14 @@ class AlMatrix:
     def dtype(self) -> str:
         return self.handle.dtype
 
+    @property
+    def layout(self) -> str:
+        """The engine-side distributed layout this matrix was minted in
+        (``rowblock`` / ``block2d`` / ``replicated``; forces a deferred
+        proxy). Real as of the backend ABI: backends declare the layouts
+        they accept and the engine relayouts when they disagree."""
+        return self.handle.layout
+
     def stats(self) -> dict[str, Any]:
         """The producing routine's scalar outputs and timing (forces);
         ``{}`` for uploaded/wrapped proxies. Handles are stripped — they

@@ -27,17 +27,31 @@ from typing import Optional
 
 _COUNTER = itertools.count(1)
 
+# Engine-side distributed layouts (re-exported by core/backends/base.py —
+# the Elemental DistMatrix vocabulary projected onto the worker mesh).
+# ``MatrixHandle.layout`` is a *real* tag as of the backend ABI: the
+# engine derives it from the actual device sharding at put time, backends
+# declare which layouts their implementations accept, and the engine
+# inserts explicit relayout steps when a consumer needs a different one
+# (counted in ``costmodel.TaskLog``). The handle's copy is a snapshot;
+# the authoritative layout lives in the engine's store (it can change on
+# ``overwrite``) — read it with ``engine.layout(handle)``.
+ROWBLOCK = "rowblock"
+BLOCK2D = "block2d"
+REPLICATED = "replicated"
+LAYOUTS = (ROWBLOCK, BLOCK2D, REPLICATED)
+
 
 @dataclasses.dataclass(frozen=True)
 class MatrixHandle:
     id: int
     shape: tuple[int, ...]
     dtype: str
-    layout: str = "block2d"        # engine-side layout tag
+    layout: str = BLOCK2D          # engine-side layout tag
     name: Optional[str] = None
 
     @staticmethod
-    def fresh(shape, dtype, layout="block2d", name=None) -> "MatrixHandle":
+    def fresh(shape, dtype, layout=BLOCK2D, name=None) -> "MatrixHandle":
         return MatrixHandle(id=next(_COUNTER), shape=tuple(int(s) for s in shape),
                             dtype=str(dtype), layout=layout, name=name)
 

@@ -6,107 +6,67 @@ the Gram matrix, where each matvec v -> X^T (X v) is a distributed two-pass
 product over the row-sharded data (the paper's footnote 3: "both
 implementations use ARPACK to compute the eigenvalues of the Gram matrix").
 
-Every routine takes the dispatching session's engine view as first
-argument (``engine.SessionView``) and returns a dict of serializable
-values / MatrixHandles — the ALI calling convention (§3.1.3). Handle
-arguments resolve inside the *calling session's* namespace and output
-handles are minted into it, so concurrent clients sharing one engine
-(§3.1.1) cannot read or clobber each other's matrices.
-
-Each routine declares its typed schema with :func:`spec.routine` —
-parameter kinds read off the signature (un-annotated = engine matrix),
-plus the *ordered output names* that client-side tuple unpacking relies
-on (``Q, R = el.qr(A)``). The engine catalogs these at ``load_library``
-time and serves them over the ``describe`` endpoint, so clients validate
-calls before anything crosses the bridge.
+As of the backend ABI this module is the library's **declaration**: each
+routine's typed schema (:func:`spec.routine` — parameter kinds read off
+the signature, ordered output names for client-side tuple unpacking) and
+nothing else. The engine catalogs these at ``load_library`` time and
+serves them over the ``describe`` endpoint, exactly as before; the
+*implementations* live in per-backend registries —
+``core/backends/jax_backend.py`` (GSPMD + Pallas kernels, chain fusion)
+and ``core/backends/reference.py`` (plain numpy) — and the engine
+dispatches execution plans through the session's selected backend. The
+bodies here raise if called directly: the engine never invokes a library
+function any more, and neither should anything else.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.libraries.spec import routine
-from repro.kernels.gram import ops as gram_ops
+from repro.core.libraries.spec import routine, spec_only
 
 
-# ---------- helpers ----------
-@jax.jit
-def _gram_matvec(x, v):
-    """v -> X^T (X v); never materializes X^T X."""
-    return x.T @ (x @ v)
-
-
-def _as_f64(a):
-    return jnp.asarray(a, jnp.float64 if jax.config.read("jax_enable_x64")
-                       else jnp.float32)
-
-
-# ---------- routines ----------
 @routine(outputs=("A",))
 def random_matrix(engine, rows: int, cols: int, seed: int = 0,
                   scale: float = 1.0, name: str = "random"):
     """Engine-side data creation (the paper's 'Alchemist loads the data'
     use case — use case 3 of Table 5 — without the client round trip)."""
-    key = jax.random.PRNGKey(seed)
-
-    @jax.jit
-    def make():
-        return scale * jax.random.normal(key, (rows, cols), jnp.float32)
-
-    arr = jax.jit(make, out_shardings=engine.dist_sharding((rows, cols)))()
-    return {"A": engine.put(arr, name=name)}
+    raise spec_only("elemental", "random_matrix")
 
 
 @routine(outputs=("A",))
 def replicate_cols(engine, A, times: int):
     """Column-wise replication (paper Fig. 3: 2.2TB -> 17.6TB scaling)."""
-    x = engine.get(A)
-    out = jnp.tile(x, (1, times))
-    return {"A": engine.put(out, name=f"{A.name}x{times}")}
+    raise spec_only("elemental", "replicate_cols")
 
 
 @routine(outputs=("C",))
 def multiply(engine, A, B):
-    x, y = engine.get(A), engine.get(B)
-    return {"C": engine.put(x @ y)}
+    """C = A B (the lowering target of client-side ``A @ B``)."""
+    raise spec_only("elemental", "multiply")
 
 
 @routine(outputs=("C",))
 def add(engine, A, B):
     """Elementwise C = A + B (the lowering target of client-side
     ``A + B`` on AlMatrix proxies)."""
-    x, y = engine.get(A), engine.get(B)
-    if x.shape != y.shape:
-        raise ValueError(f"add expects equal shapes, got {tuple(x.shape)} "
-                         f"and {tuple(y.shape)}")
-    return {"C": engine.put(x + y)}
+    raise spec_only("elemental", "add")
 
 
 @routine(outputs=("C",))
 def transpose(engine, A):
     """C = A^T (the lowering target of client-side ``A.T``)."""
-    x = engine.get(A)
-    return {"C": engine.put(jnp.asarray(x.T))}
+    raise spec_only("elemental", "transpose")
 
 
 @routine(outputs=("G",))
 def gram(engine, A, use_pallas: bool = False):
     """G = A^T A via the blocked kernel (interpret-mode on CPU)."""
-    x = engine.get(A)
-    g = gram_ops.gram(x, use_pallas=use_pallas)
-    return {"G": engine.put(g)}
+    raise spec_only("elemental", "gram")
 
 
 @routine(outputs=("Q", "R"))
 def qr(engine, A):
     """Thin QR. On the engine mesh the row-sharded x makes this a TSQR-like
     computation under GSPMD (per-shard factor + small recombine)."""
-    x = engine.get(A)
-    q, r = jnp.linalg.qr(x, mode="reduced")
-    return {"Q": engine.put(q), "R": engine.put(r)}
+    raise spec_only("elemental", "qr")
 
 
 @routine(outputs=("U", "S", "V"))
@@ -119,56 +79,7 @@ def truncated_svd(engine, A, k: int, oversample: int = 32,
     same structure as ARPACK's reverse-communication interface driving
     distributed matvecs in the paper's MPI implementation.
     """
-    x = engine.get(A)
-    n, d = x.shape
-    m = min(d, k + oversample) if max_iters == 0 else min(d, max_iters)
-
-    key = jax.random.PRNGKey(seed)
-    q0 = jax.random.normal(key, (d,), x.dtype)
-    q0 = q0 / jnp.linalg.norm(q0)
-
-    Q = np.zeros((d, m), dtype=np.float64)
-    alpha = np.zeros(m)
-    beta = np.zeros(m)
-    q = np.asarray(q0, np.float64)
-    q_prev = np.zeros(d)
-    b_prev = 0.0
-    matvecs = 0
-    for j in range(m):
-        Q[:, j] = q
-        w = np.asarray(_gram_matvec(x, jnp.asarray(q, x.dtype)), np.float64)
-        matvecs += 1
-        a = float(q @ w)
-        alpha[j] = a
-        w = w - a * q - b_prev * q_prev
-        # full reorthogonalization (twice is enough)
-        for _ in range(2):
-            w = w - Q[:, : j + 1] @ (Q[:, : j + 1].T @ w)
-        b = float(np.linalg.norm(w))
-        beta[j] = b
-        if b < 1e-12:
-            m = j + 1
-            Q = Q[:, :m]
-            alpha, beta = alpha[:m], beta[:m]
-            break
-        q_prev, b_prev, q = q, b, w / b
-
-    T = np.diag(alpha) + np.diag(beta[: m - 1], 1) + np.diag(beta[: m - 1], -1)
-    evals, evecs = np.linalg.eigh(T)
-    order = np.argsort(evals)[::-1][:k]
-    lam = np.maximum(evals[order], 0.0)
-    sigma = np.sqrt(lam)
-    V = Q @ evecs[:, order]                                    # (d, k)
-    v_dev = jnp.asarray(V, x.dtype)
-    U = (x @ v_dev) / jnp.maximum(jnp.asarray(sigma, x.dtype), 1e-30)
-
-    return {
-        "U": engine.put(U),
-        "S": engine.put(jnp.asarray(sigma, jnp.float32)),
-        "V": engine.put(v_dev),
-        "lanczos_iters": int(m),
-        "matvecs": matvecs,
-    }
+    raise spec_only("elemental", "truncated_svd")
 
 
 @routine(outputs=("U", "S", "V"))
@@ -176,40 +87,14 @@ def gram_svd(engine, A, k: int, use_pallas: bool = False):
     """Direct route for modest column counts (the paper's ocean matrix is
     6.1M x 8096 — exactly this regime): form G = A^T A with the blocked
     Pallas kernel, eigh the (d, d) Gram, take the top-k pairs."""
-    x = engine.get(A)
-    g = gram_ops.gram(x, use_pallas=use_pallas)
-    evals, evecs = jnp.linalg.eigh(g)
-    order = jnp.argsort(evals)[::-1][:k]
-    lam = jnp.maximum(evals[order], 0.0)
-    sigma = jnp.sqrt(lam)
-    v = evecs[:, order]
-    u = (x @ v.astype(x.dtype)) / jnp.maximum(sigma.astype(x.dtype), 1e-30)
-    return {"U": engine.put(u), "S": engine.put(sigma.astype(jnp.float32)),
-            "V": engine.put(v.astype(jnp.float32))}
+    raise spec_only("elemental", "gram_svd")
 
 
 @routine(outputs=("U", "S", "V"))
 def randomized_svd(engine, A, k: int, oversample: int = 8,
                    power_iters: int = 2, seed: int = 0):
     """RandNLA alternative (Halko et al.): range finder + small SVD."""
-    x = engine.get(A)
-    n, d = x.shape
-    ell = min(d, k + oversample)
-    key = jax.random.PRNGKey(seed)
-
-    @jax.jit
-    def sketch(x):
-        omega = jax.random.normal(key, (d, ell), x.dtype)
-        y = x @ omega
-        for _ in range(power_iters):
-            y = x @ (x.T @ y)
-        q, _ = jnp.linalg.qr(y, mode="reduced")
-        b = q.T @ x                                            # (ell, d)
-        ub, s, vt = jnp.linalg.svd(b, full_matrices=False)
-        return q @ ub[:, :k], s[:k], vt[:k].T
-
-    u, s, v = sketch(x)
-    return {"U": engine.put(u), "S": engine.put(s), "V": engine.put(v)}
+    raise spec_only("elemental", "randomized_svd")
 
 
 ROUTINES = {

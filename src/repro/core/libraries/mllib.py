@@ -16,13 +16,16 @@ is precisely the point of the comparison — no bridge, no sessions, no
 transfer, just per-round BSP overhead.
 
 The module additionally exports a ``ROUTINES`` dict so the baseline is a
-first-class, *describable* ALI library like elemental/skylark: those
-wrappers take the session's engine view and handles, rebuild the
-row-partitioned RowMatrix from the resident array, and run the identical
-baseline math — engine-hosted only so catalogs, typed validation, and
-benchmark harnesses can drive both sides of the paper's comparison
-through one façade API. The measured comparison itself should keep using
-the direct entry points (they are the no-bridge side by construction).
+first-class, *describable* ALI library like elemental/skylark: the
+declarations below catalog an engine-hosted wrapper whose per-backend
+implementation (shared by the jax and reference backends — the baseline
+is row-partitioned host math by construction, accelerating it would
+unmake the comparison; see ``core/backends/reference.py``) rebuilds the
+row-partitioned RowMatrix from the resident array and runs the identical
+baseline math, so catalogs, typed validation, and benchmark harnesses
+can drive both sides of the paper's comparison through one façade API.
+The measured comparison itself should keep using the direct entry points
+(they are the no-bridge side by construction).
 """
 from __future__ import annotations
 
@@ -31,7 +34,7 @@ import time
 import numpy as np
 
 from repro.core.costmodel import spark_cg_iteration_seconds
-from repro.core.libraries.spec import routine
+from repro.core.libraries.spec import routine, spec_only
 from repro.frontend.rowmatrix import RowMatrix
 
 
@@ -132,7 +135,7 @@ def spark_truncated_svd(x: RowMatrix, k: int, oversample: int = 32,
     return sigma, V, stats
 
 
-# ---- ALI-hosted wrappers (the describable catalog surface) ----------------
+# ---- ALI-hosted declarations (the describable catalog surface) ------------
 @routine(outputs=("W",))
 def _ali_cg_solve(engine, X, Y, lam: float = 1e-5, max_iters: int = 200,
                   tol: float = 1e-8, nodes: int = 20,
@@ -142,11 +145,7 @@ def _ali_cg_solve(engine, X, Y, lam: float = 1e-5, max_iters: int = 200,
     row-partitioned math runs (one simulated BSP round per iteration),
     and the solution comes back as an engine handle plus the baseline's
     stats dict."""
-    x = RowMatrix.from_array(np.asarray(engine.get(X)), num_partitions)
-    y = RowMatrix.from_array(np.asarray(engine.get(Y)), num_partitions)
-    w, stats = spark_cg_solve(x, y, lam=lam, max_iters=max_iters, tol=tol,
-                              nodes=nodes)
-    return {"W": engine.put(_device(w)), **stats}
+    raise spec_only("mllib", "cg_solve")
 
 
 @routine(outputs=("S", "V"))
@@ -156,20 +155,7 @@ def _ali_truncated_svd(engine, A, k: int, oversample: int = 32,
     """The MLlib-style Lanczos SVD baseline through the ALI calling
     convention (see :func:`_ali_cg_solve`): returns the top-k singular
     values and right singular vectors as engine handles."""
-    x = RowMatrix.from_array(np.asarray(engine.get(A)), num_partitions)
-    sigma, v, stats = spark_truncated_svd(x, k=k, oversample=oversample,
-                                          nodes=nodes, seed=seed)
-    return {"S": engine.put(_device(sigma)), "V": engine.put(_device(v)),
-            **stats}
-
-
-def _device(a: np.ndarray):
-    """Host result -> device array (engine.put stores device arrays).
-    Imported lazily so the direct client-side entry points above keep
-    their numpy-only dependency surface."""
-    import jax.numpy as jnp
-
-    return jnp.asarray(a, jnp.float32)
+    raise spec_only("mllib", "truncated_svd")
 
 
 ROUTINES = {

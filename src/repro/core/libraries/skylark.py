@@ -1,23 +1,20 @@
 """The "libSkylark" ALI: randomized-linear-algebra ML routines — the paper's
-§4.1 workload. Provides Rahimi-Recht random feature expansion (done
+§4.1 workload. Declares Rahimi-Recht random feature expansion (done
 engine-side, as the paper does, so only the small raw feature matrix crosses
 the bridge) and the conjugate-gradient solver for the regularized system
 
     (Z^T Z + n*lambda*I) W = Z^T Y.
 
-Routines receive the dispatching session's engine view
-(``engine.SessionView``) as first argument: handle args resolve in the
-calling session's namespace, output handles are minted into it (§3.1.3).
+As of the backend ABI this module carries only the typed **declarations**
+(see ``elemental.py`` for the pattern): implementations are registered
+per-backend in ``core/backends/jax_backend.py`` (jitted CG over the
+fused ``normal_matvec`` kernel) and ``core/backends/reference.py``
+(plain numpy), and the engine dispatches through the session's selected
+backend — the bodies here raise if called directly.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.libraries.spec import routine
-from repro.kernels.normal_matvec import ops as nm_ops
-from repro.kernels.rf_map import ops as rf_ops
+from repro.core.libraries.spec import routine, spec_only
 
 
 @routine(outputs=("Z",))
@@ -25,25 +22,7 @@ def random_features(engine, X, rf_dim: int, bandwidth: float = 1.0,
                     seed: int = 0):
     """Z = sqrt(2/D) cos(X W / sigma + b) — expansion happens on the engine
     (paper: 'the feature matrix is instead expanded within Alchemist')."""
-    x = engine.get(X)
-    z = rf_ops.rf_map(x, rf_dim, bandwidth=bandwidth, seed=seed)
-    return {"Z": engine.put(z, name="rf_features")}
-
-
-def _cg_step(x, lam_n, state, use_pallas=False):
-    """One CG iteration on the normal equations; x row-sharded on the
-    engine mesh makes the two-pass product a distributed matvec. With
-    use_pallas, the fused normal_matvec kernel streams X once per
-    iteration instead of twice (the CG loop's dominant HBM traffic)."""
-    w, r, p, rs = state
-    ap = nm_ops.normal_matvec(x, p, use_pallas=use_pallas).astype(x.dtype) \
-        + lam_n * p
-    alpha = rs / jnp.sum(p * ap, axis=0)
-    w = w + alpha * p
-    r = r - alpha * ap
-    rs_new = jnp.sum(r * r, axis=0)
-    p = r + (rs_new / rs) * p
-    return w, r, p, rs_new
+    raise spec_only("skylark", "random_features")
 
 
 @routine(outputs=("W",))
@@ -55,46 +34,7 @@ def cg_solve(engine, X, Y, lam: float = 1e-5, rf_dim: int = 0,
     Returns the weight handle plus per-call statistics (iterations, final
     relative residual) for the benchmark tables.
     """
-    x = engine.get(X)
-    if rf_dim:
-        x = rf_ops.rf_map(x, rf_dim, bandwidth=bandwidth, seed=seed)
-    y = engine.get(Y)
-    n, d = x.shape
-    c = y.shape[1]
-    lam_n = jnp.asarray(n * lam, x.dtype)
-
-    b = x.T @ y                                  # (d, c) rhs
-    b_norm = jnp.linalg.norm(b, axis=0)
-    w = jnp.zeros((d, c), x.dtype)
-    r = b
-    p = r
-    rs = jnp.sum(r * r, axis=0)
-
-    _step = jax.jit(lambda x, lam_n, st: _cg_step(x, lam_n, st,
-                                                  use_pallas=use_pallas))
-
-    def step(st):
-        return _step(x, lam_n, st)
-
-    iters = 0
-    rel = float(jnp.max(jnp.sqrt(rs) / jnp.maximum(b_norm, 1e-30)))
-    history = [rel]
-    state = (w, r, p, rs)
-    while iters < max_iters and rel > tol:
-        state = step(state)
-        iters += 1
-        rel = float(jnp.max(jnp.sqrt(state[3])
-                            / jnp.maximum(b_norm, 1e-30)))
-        history.append(rel)
-
-    w = state[0]
-    return {
-        "W": engine.put(w, name="cg_solution"),
-        "iterations": iters,
-        "relative_residual": rel,
-        "residual_history": [float(h) for h in history],
-        "expanded_dim": int(d),
-    }
+    raise spec_only("skylark", "cg_solve")
 
 
 @routine(outputs=("W", "H"))
@@ -103,24 +43,7 @@ def nmf(engine, A, k: int, max_iters: int = 100, seed: int = 0,
     """Non-negative matrix factorization (multiplicative updates) — the
     other factorization from the motivating case studies (Gittens et al.
     2016). A >= 0 (n, d) ~ W (n, k) H (k, d), engine-resident throughout."""
-    x = jnp.maximum(engine.get(A), 0.0)
-    n, d = x.shape
-    kw, kh = jax.random.split(jax.random.PRNGKey(seed))
-    scale = jnp.sqrt(jnp.mean(x) / k)
-    w = scale * jax.random.uniform(kw, (n, k), x.dtype, 0.1, 1.0)
-    h = scale * jax.random.uniform(kh, (k, d), x.dtype, 0.1, 1.0)
-
-    @jax.jit
-    def update(w, h):
-        h = h * (w.T @ x) / (w.T @ (w @ h) + eps)
-        w = w * (x @ h.T) / (w @ (h @ h.T) + eps)
-        return w, h
-
-    for _ in range(max_iters):
-        w, h = update(w, h)
-    resid = float(jnp.linalg.norm(x - w @ h) / jnp.linalg.norm(x))
-    return {"W": engine.put(w), "H": engine.put(h),
-            "relative_residual": resid, "iterations": max_iters}
+    raise spec_only("skylark", "nmf")
 
 
 ROUTINES = {

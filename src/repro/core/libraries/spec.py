@@ -191,6 +191,22 @@ def routine(*, outputs: tuple[str, ...] = (),
     return wrap
 
 
+def spec_only(library: str, name: str) -> NotImplementedError:
+    """The error a catalog-only routine body raises if invoked directly.
+
+    As of the backend ABI (``core/backends``) the bundled libraries
+    declare *what* each routine computes — signature, outputs, doc — and
+    every *how* lives in per-backend implementation registries; the
+    engine builds an execution plan and dispatches it through the
+    session's backend, never calling the library function. A direct call
+    reaching one of these bodies is therefore a bug, and says so."""
+    return NotImplementedError(
+        f"{library}.{name} is a catalog declaration; its implementations "
+        "are registered per-backend in repro.core.backends — dispatch "
+        "through the engine (AlchemistContext.library(...)) instead of "
+        "calling the library function directly")
+
+
 def spec_of(fn: Callable, name: Optional[str] = None) -> RoutineSpec:
     """The routine's declared spec, or one synthesized by introspection
     (``declared=False``, no output order) for undecorated functions."""

@@ -23,6 +23,10 @@ Three message kinds cross the client/engine boundary, all msgpack-encoded:
   ``{"routines": {name: spec-dict}}``; clients rebuild ``RoutineSpec``
   objects with ``spec.from_wire`` and validate calls *before* submitting
   anything (the fail-fast half of the ACI).
+* ``Configure`` — session configuration: select the execution backend
+  this session's commands run in (``core/backends``), and toggle chain
+  fusion. The engine validates against its registry and echoes the
+  effective settings.
 * ``Result`` — values, timing, the echoing session, and an ``error`` string
   (empty on success) so engine-side failures propagate as data instead of
   exceptions, exactly like an error status on the socket. For scheduled
@@ -101,6 +105,20 @@ class Describe:
     session — discovery is a client action like any other."""
     library: str = ""
     session: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Configure:
+    """Session configuration: select the execution environment this
+    session's commands run in. ``options`` currently understands
+    ``backend`` (a registered backend name, e.g. ``"jax"`` /
+    ``"reference"``) and ``fusion`` (bool; opt a session out of chain
+    fusion, e.g. to benchmark the unfused dispatch path). The engine
+    validates against its backend registry and echoes the effective
+    settings; unknown option keys are rejected — a typo must not
+    silently configure nothing."""
+    session: int
+    options: dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,6 +248,23 @@ def decode_describe(data: bytes) -> Describe:
     Command: discovery must not default into the system namespace)."""
     d = msgpack.unpackb(data)
     return Describe(library=d.get("library", ""), session=d["session"])
+
+
+def encode_configure(c: Configure) -> bytes:
+    """Serialize a session-configuration message (options must already be
+    plain scalars — there is nothing handle-valued to configure)."""
+    return msgpack.packb({
+        "session": c.session,
+        "options": _pack_value(dict(c.options)),
+    })
+
+
+def decode_configure(data: bytes) -> Configure:
+    """Inverse of :func:`encode_configure` (session mandatory, like
+    Command: configuration must not default into the system namespace)."""
+    d = msgpack.unpackb(data)
+    return Configure(session=d["session"],
+                     options=_unpack_value(d.get("options", {})) or {})
 
 
 def encode_task_op(op: TaskOp) -> bytes:

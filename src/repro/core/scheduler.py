@@ -32,6 +32,13 @@ The scheduler is engine-agnostic: it runs ``task.fn(task)`` thunks and
 records per-task queue-wait vs execute time, leaving protocol encoding to
 the engine. ``max_running_observed`` exposes the concurrency high-water
 mark so tests and the multi-client benchmark can prove overlap is real.
+
+For the backend ABI's chain fusion (``core/backends``), a running task
+may *claim* the chain of queued tasks that depend only on it
+(:meth:`TaskScheduler.claim_chain`) and execute them inside itself as
+one fused program, completing each via :meth:`finish_claimed`; claiming
+honours every edge in the table, so orderings against other sessions'
+writes are preserved — an interleaved hazard simply stops the claim.
 """
 from __future__ import annotations
 
@@ -74,9 +81,13 @@ class Task:
     barrier: bool = False
     state: str = QUEUED
     deps: int = 0
+    dep_ids: tuple[int, ...] = ()     # the dependency edges, by task id
     data_deps: tuple[int, ...] = ()
     reads: tuple[int, ...] = ()       # handle ids, for hazard-map pruning
     writes: tuple[int, ...] = ()
+    # opaque caller state: the engine stores the decoded Command here,
+    # which is what chain claiming hands back for fused execution
+    payload: Any = None
     dependents: list[int] = dataclasses.field(default_factory=list)
     submitted_at: float = 0.0
     started_at: float = 0.0
@@ -113,6 +124,7 @@ class TaskScheduler:
         self._finished: collections.deque[Task] = collections.deque()
         self._cb_lock = threading.Lock()
         self._shutdown = False
+        self._paused = False
         self._running = 0
         self.max_running_observed = 0
 
@@ -120,13 +132,15 @@ class TaskScheduler:
     def submit(self, fn: Callable[[Task], Any], *, session: int = 0,
                reads: Iterable[int] = (), writes: Iterable[int] = (),
                data_deps: Iterable[int] = (), barrier: bool = False,
-               label: str = "") -> Task:
+               label: str = "", payload: Any = None) -> Task:
         """Add a task; returns immediately with the QUEUED task.
 
         ``reads``/``writes`` are engine handle IDs the task will resolve
         (write implies read); ``data_deps`` are producer task IDs whose
         deferred outputs the task consumes; ``barrier=True`` serializes
-        against every in-flight task, before and after.
+        against every in-flight task, before and after. ``payload`` is
+        opaque caller state carried on the row (chain claiming returns
+        it to the caller).
         """
         reads, writes = set(reads), set(writes)
         reads -= writes
@@ -137,6 +151,7 @@ class TaskScheduler:
                         label=label, barrier=barrier,
                         data_deps=tuple(dict.fromkeys(data_deps)),
                         reads=tuple(reads), writes=tuple(writes),
+                        payload=payload,
                         submitted_at=time.perf_counter())
             deps: set[int] = set()
 
@@ -172,6 +187,7 @@ class TaskScheduler:
             self._tasks[task.id] = task
             self._session_tail[session] = task.id
             task.deps = len(deps)
+            task.dep_ids = tuple(sorted(deps))
             for d in deps:
                 self._tasks[d].dependents.append(task.id)
             if task.deps == 0:
@@ -236,6 +252,81 @@ class TaskScheduler:
         with self._cv:
             return self._running
 
+    # ---- chain claiming (backend fusion support) ------------------------
+    def claim_chain(self, lead_id: int,
+                    predicate: Callable[[Task], bool],
+                    limit: int = 64) -> list[Task]:
+        """Claim the dependency chain hanging off a RUNNING task, so the
+        caller can execute it *inside* that task (the engine fuses the
+        chain into one backend program).
+
+        A QUEUED task is claimable when every one of its unfinished
+        dependency edges points into the claimed set (so by the time the
+        fused program runs, nothing else it was ordered after is still
+        outstanding), it belongs to the lead's session, it is not a
+        barrier, none of its data dependencies failed, and ``predicate``
+        (the engine's fusibility check) accepts it. Claimed tasks are
+        moved to RUNNING here — no worker will pop them — and MUST each
+        be completed later with :meth:`finish_claimed`.
+
+        The walk extends one task at a time from the chain's tail, so it
+        claims exactly the straight-line (or diamond-within-chain)
+        suffix a lazy client submitted in one burst; anything with an
+        edge outside the chain — another session's interleaved write, an
+        unfinished unrelated producer — stops the claim, preserving
+        every ordering the task table encodes.
+        """
+        chain: list[Task] = []
+        with self._cv:
+            lead = self._tasks.get(lead_id)
+            if lead is None or lead.state != RUNNING or lead.barrier:
+                return chain
+            claimed = {lead_id}
+            tail = lead
+            while len(chain) < limit:
+                nxt = None
+                for did in tail.dependents:
+                    d = self._tasks.get(did)
+                    if d is None or d.state != QUEUED or d.barrier or \
+                            d.session != lead.session:
+                        continue
+                    pending = [dep for dep in d.dep_ids
+                               if (pt := self._tasks.get(dep)) is not None
+                               and pt.state in (QUEUED, RUNNING)]
+                    if not pending or not all(p in claimed
+                                              for p in pending):
+                        continue
+                    if any((pt := self._tasks.get(x)) is not None
+                           and pt.state == FAILED for x in d.data_deps):
+                        continue
+                    if not predicate(d):
+                        continue
+                    if nxt is None or d.id < nxt.id:
+                        nxt = d
+                if nxt is None:
+                    break
+                now = time.perf_counter()
+                nxt.state = RUNNING
+                nxt.started_at = now
+                nxt.wait_s = now - nxt.submitted_at
+                chain.append(nxt)
+                claimed.add(nxt.id)
+                tail = nxt
+        return chain
+
+    def finish_claimed(self, task_id: int, result: Any = None,
+                       state: str = DONE, error: str = "") -> None:
+        """Complete one task previously claimed by :meth:`claim_chain`:
+        record its result/error, cascade its dependents and hazard
+        bookkeeping exactly as if a worker had run it (it never occupied
+        a worker slot, so the running count is untouched)."""
+        with self._cv:
+            task = self._tasks.get(task_id)
+            if task is None or task.state != RUNNING:
+                raise KeyError(
+                    f"task #{task_id} is not a claimed RUNNING task")
+        self._finish(task, state, result, error, worker=False)
+
     def pending_writers(self, handles: Iterable[int]) -> bool:
         """True if any of the given engine-handle IDs has a QUEUED/RUNNING
         *writer* task. The engine's cache fast path checks this before
@@ -297,6 +388,20 @@ class TaskScheduler:
                         f"in-flight tasks after {timeout}s")
                 self._cv.wait(remaining)
 
+    def pause(self) -> None:
+        """Stop popping ready tasks (submissions still accepted). Lets a
+        caller land a whole burst in the table before dispatch starts —
+        how benchmarks and tests make chain claiming deterministic
+        instead of racing the first task against later submissions."""
+        with self._cv:
+            self._paused = True
+
+    def resume(self) -> None:
+        """Undo :meth:`pause`; wakes the worker pool."""
+        with self._cv:
+            self._paused = False
+            self._cv.notify_all()
+
     def shutdown(self) -> None:
         """Stop accepting tasks and join the worker threads. In-flight
         tasks finish; QUEUED tasks are failed."""
@@ -325,7 +430,8 @@ class TaskScheduler:
     def _worker(self) -> None:
         while True:
             with self._cv:
-                while not self._ready and not self._shutdown:
+                while (not self._ready or self._paused) \
+                        and not self._shutdown:
                     self._cv.wait()
                 if self._shutdown and not self._ready:
                     return
@@ -358,14 +464,15 @@ class TaskScheduler:
                 self._finish(task, DONE, result, "")
 
     def _finish(self, task: Task, state: str, result: Any,
-                error: str) -> None:
+                error: str, worker: bool = True) -> None:
         with self._cv:
             task.finished_at = time.perf_counter()
             task.exec_s = task.finished_at - task.started_at
             task.state = state
             task.result = result
             task.error = error
-            self._running -= 1
+            if worker:          # claimed tasks never held a worker slot
+                self._running -= 1
             for dep_id in task.dependents:
                 dep = self._tasks.get(dep_id)
                 if dep is None:                # forgotten with its session
