@@ -39,6 +39,7 @@ from benchmarks.common import header, row
 from repro.core import AlchemistContext, AlchemistEngine
 from repro.core.engine import make_engine_mesh
 from repro.core.libraries import elemental, skylark
+from repro.core.server import AlchemistServer
 
 
 def _tenant_workload(ac: AlchemistContext, x: np.ndarray, y: np.ndarray,
@@ -62,26 +63,40 @@ def _tenant_workload(ac: AlchemistContext, x: np.ndarray, y: np.ndarray,
     }
 
 
-def run(num_tenants: int, shape, k: int, smoke: bool) -> bool:
+def run(num_tenants: int, shape, k: int, smoke: bool,
+        bridge: str = "inmemory") -> bool:
     header("cache amortization: cold vs warm repeated-tenant workload")
     engine = AlchemistEngine(make_engine_mesh(1))
     engine.load_library("elemental", elemental)
     engine.load_library("skylark", skylark)
+    server = (AlchemistServer(engine=engine).start()
+              if bridge == "socket" else None)
+
+    def _ctx(name: str) -> AlchemistContext:
+        if server is not None:
+            return AlchemistContext(address=server.address,
+                                    client_name=name)
+        return AlchemistContext(engine=engine, client_name=name)
+
     rng = np.random.RandomState(0)
     x = rng.randn(*shape).astype(np.float32)
     y = rng.randn(shape[0], 4).astype(np.float32)
 
     # warm XLA's compile caches on different content (same shapes) so the
     # cold tenant below measures compute, not jit compilation
-    warmup = AlchemistContext(engine=engine, client_name="warmup")
+    warmup = _ctx("warmup")
     _tenant_workload(warmup, rng.randn(*shape).astype(np.float32),
                      rng.randn(shape[0], 4).astype(np.float32), k)
 
-    cold_ac = AlchemistContext(engine=engine, client_name="tenant-0")
+    cold_ac = _ctx("tenant-0")
     cold = _tenant_workload(cold_ac, x, y, k)
+    # warm tenants' uploads must dedup: over the socket that means zero
+    # further upload frames — only tiny alias-lookup probes cross
+    upload_frames_cold = (server.wire_log.stat("upload").frames_in
+                          if server else 0)
     warms = []
     for i in range(1, num_tenants):
-        ac = AlchemistContext(engine=engine, client_name=f"tenant-{i}")
+        ac = _ctx(f"tenant-{i}")
         warms.append((ac, _tenant_workload(ac, x, y, k)))
 
     warm_walls = [w["wall_s"] for _, w in warms]
@@ -124,6 +139,15 @@ def run(num_tenants: int, shape, k: int, smoke: bool) -> bool:
             ["to_engine_bytes"] for ac, _ in warms),
         "must be 0: every warm upload dedup'd")
 
+    warm_upload_frames = 0
+    if server is not None:
+        warm_upload_frames = (server.wire_log.stat("upload").frames_in
+                              - upload_frames_cold)
+        row("cache/warm_upload_wire_frames", warm_upload_frames,
+            "must be 0: dedup'd uploads never stream over TCP")
+        row("cache/wire_bytes_total", server.wire_log.total_bytes,
+            "all measured traffic, both directions")
+
     ok = True
     if smoke:
         if not (cold["hits"] == 0):
@@ -134,6 +158,10 @@ def run(num_tenants: int, shape, k: int, smoke: bool) -> bool:
             ok = False
         if not dedup_ok:
             print("FAIL: a warm upload was not a zero-byte dedup")
+            ok = False
+        if server is not None and warm_upload_frames != 0:
+            print(f"FAIL: warm tenants put {warm_upload_frames} upload "
+                  "frames on the wire; dedup should have sent none")
             ok = False
         if not speedup >= 5.0:
             print(f"FAIL: warm speedup {speedup:.1f}x < 5x")
@@ -146,6 +174,8 @@ def run(num_tenants: int, shape, k: int, smoke: bool) -> bool:
         ac.stop()
     cold_ac.stop()
     warmup.stop()
+    if server is not None:
+        server.stop()
     engine.shutdown()
     return ok
 
@@ -159,11 +189,17 @@ def main() -> None:
     p.add_argument("--rows", type=int, default=2048)
     p.add_argument("--cols", type=int, default=256)
     p.add_argument("--k", type=int, default=16)
+    p.add_argument("--bridge", choices=["inmemory", "socket"],
+                   default="inmemory",
+                   help="transport between tenants and the engine: "
+                        "in-process calls, or real TCP through "
+                        "core/server.py")
     args = p.parse_args()
     if args.smoke:
-        ok = run(3, (512, 128), k=8, smoke=True)
+        ok = run(3, (512, 128), k=8, smoke=True, bridge=args.bridge)
         sys.exit(0 if ok else 1)
-    run(args.tenants, (args.rows, args.cols), k=args.k, smoke=False)
+    run(args.tenants, (args.rows, args.cols), k=args.k, smoke=False,
+        bridge=args.bridge)
 
 
 if __name__ == "__main__":

@@ -56,6 +56,7 @@ from repro.core import AlchemistContext, AlchemistEngine
 from repro.core.costmodel import percentile
 from repro.core.engine import make_engine_mesh
 from repro.core.libraries import elemental
+from repro.core.server import AlchemistServer
 
 HEAVY_SHAPE = (2048, 512)             # the paper's offloaded regime
 LIGHT_SHAPE = (128, 32)               # the 2ms interactive tenant
@@ -85,25 +86,39 @@ def _light_loop(ac, mats, deadline, latencies):
 
 
 def _run_config(num_clients: int, duration_s: float, k: int,
-                workers: int) -> dict:
+                workers: int, bridge: str = "inmemory") -> dict:
     """1 heavy + (num_clients-1) light tenants against a fresh engine.
 
     The routine cache is disabled: every tenant here repeats identical
     calls on its resident matrices, which the content-addressed cache
     would short-circuit entirely — this benchmark measures *dispatch*
     (FIFO vs worker pool); ``benchmarks/cache_amortization.py`` measures
-    the cache."""
+    the cache.
+
+    ``bridge="socket"`` runs the same mix over real TCP: the engine is
+    fronted by a ``core/server.py`` instance and every tenant is its own
+    socket connection — dispatch overlap now has to survive framing,
+    per-connection handler threads, and the kernel's loopback stack."""
     engine = AlchemistEngine(make_engine_mesh(1),
                             scheduler_workers=workers, cache_entries=0)
     engine.load_library("elemental", elemental)
+    server = (AlchemistServer(engine=engine).start()
+              if bridge == "socket" else None)
+
+    def _ctx(name: str) -> AlchemistContext:
+        if server is not None:
+            return AlchemistContext(address=server.address,
+                                    client_name=name)
+        return AlchemistContext(engine=engine, client_name=name)
+
     rng = np.random.RandomState(0)
 
-    heavy_ac = AlchemistContext(engine=engine, client_name="heavy")
+    heavy_ac = _ctx("heavy")
     heavy_al = heavy_ac.send_matrix(
         rng.randn(*HEAVY_SHAPE).astype(np.float32))
     light = []
     for i in range(num_clients - 1):
-        ac = AlchemistContext(engine=engine, client_name=f"light-{i}")
+        ac = _ctx(f"light-{i}")
         a = ac.send_matrix(rng.randn(*LIGHT_SHAPE).astype(np.float32))
         b = ac.send_matrix(rng.randn(
             LIGHT_SHAPE[1], LIGHT_SHAPE[1]).astype(np.float32))
@@ -143,25 +158,29 @@ def _run_config(num_clients: int, duration_s: float, k: int,
         "bridge_bytes": sum(
             engine.transfer_log.session_summary(ac.session)
             ["to_engine_bytes"] for ac in ctxs),
+        "wire_frames": server.wire_log.total_frames if server else 0,
+        "wire_bytes": server.wire_log.total_bytes if server else 0,
     }
     for ac in ctxs:
         ac.stop()
+    if server is not None:
+        server.stop()
     engine.shutdown()
     return out
 
 
 def run(clients_sweep, duration_s: float, k: int, workers: int,
-        reps: int = 3) -> None:
+        reps: int = 3, bridge: str = "inmemory") -> None:
     header("multi-client throughput: serialized FIFO vs async scheduler")
     print(f"mix: 1 heavy tenant (truncated_svd k={k} on "
           f"{HEAVY_SHAPE[0]}x{HEAVY_SHAPE[1]}) + N-1 light tenants "
           f"(multiply/gram/qr on {LIGHT_SHAPE[0]}x{LIGHT_SHAPE[1]}); "
           f"{duration_s:.0f}s time-box; pool = {workers} workers "
           f"(host has {os.cpu_count()} cores); median of {reps} "
-          "interleaved serial/async reps")
+          f"interleaved serial/async reps; bridge = {bridge}")
 
     # warm every jit cache so the sweep measures dispatch, not compiles
-    _run_config(2, min(duration_s, 2.0), k, workers)
+    _run_config(2, min(duration_s, 2.0), k, workers, bridge=bridge)
 
     print("clients,serial_ops_s,async_ops_s,speedup,"
           "light_p50_ms_serial,light_p50_ms_async,"
@@ -171,8 +190,10 @@ def run(clients_sweep, duration_s: float, k: int, workers: int,
         # alternate the two engines so slow host drift hits both equally
         serials, concs = [], []
         for _ in range(reps):
-            serials.append(_run_config(n, duration_s, k, workers=1))
-            concs.append(_run_config(n, duration_s, k, workers=workers))
+            serials.append(_run_config(n, duration_s, k, workers=1,
+                                       bridge=bridge))
+            concs.append(_run_config(n, duration_s, k, workers=workers,
+                                     bridge=bridge))
         s_tput = float(np.median([r["throughput"] for r in serials]))
         c_tput = float(np.median([r["throughput"] for r in concs]))
         serial = serials[int(np.argsort(
@@ -190,6 +211,11 @@ def run(clients_sweep, duration_s: float, k: int, workers: int,
         if n > 1:
             row("multiclient/overlap_observed", conc["max_running"],
                 f"clients={n} (must exceed 1 for real concurrency)")
+        if bridge == "socket":
+            row("multiclient/wire_frames", conc["wire_frames"],
+                f"clients={n} measured TCP frames (server side)")
+            row("multiclient/wire_bytes", conc["wire_bytes"],
+                f"clients={n} measured bytes on the wire")
 
 
 def main() -> None:
@@ -203,13 +229,19 @@ def main() -> None:
     p.add_argument("--k", type=int, default=8, help="truncated_svd rank")
     p.add_argument("--workers", type=int,
                    default=max(2, min(8, os.cpu_count() or 2)))
+    p.add_argument("--bridge", choices=["inmemory", "socket"],
+                   default="inmemory",
+                   help="transport between tenants and the engine: "
+                        "in-process calls, or real TCP through "
+                        "core/server.py")
     args = p.parse_args()
     if args.smoke:
-        run([1, 2, 4], duration_s=2.0, k=8, workers=2, reps=3)
+        run([1, 2, 4], duration_s=2.0, k=8, workers=2, reps=3,
+            bridge=args.bridge)
     else:
         clients = [int(c) for c in args.clients.split(",")]
         run(clients, duration_s=args.duration, k=args.k,
-            workers=args.workers)
+            workers=args.workers, bridge=args.bridge)
 
 
 if __name__ == "__main__":

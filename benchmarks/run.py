@@ -31,8 +31,13 @@ ALL = {
     # smoke-sized here; the standalone script exposes the full sweep
     "multiclient": lambda: multiclient_throughput.run(
         [1, 2, 4], duration_s=2.0, k=8, workers=2),
+    # the same tenant mix over real TCP (core/server.py + SocketBridge)
+    "multiclient_socket": lambda: multiclient_throughput.run(
+        [1, 2, 4], duration_s=2.0, k=8, workers=2, bridge="socket"),
     "cache": lambda: cache_amortization.run(
         3, (512, 128), k=8, smoke=False),
+    "cache_socket": lambda: cache_amortization.run(
+        3, (512, 128), k=8, smoke=False, bridge="socket"),
     "chain": lambda: chain_pipelining.run([4, 16, 64]),
     # smoke-sized here; the standalone script exposes the full sweep
     "fusion": lambda: (backend_fusion.run([4, 16]),

@@ -48,7 +48,7 @@ import types
 import weakref
 from typing import Any, Optional
 
-from repro.core import protocol, transfer
+from repro.core import protocol, transfer, wire
 from repro.core.engine import ENGINE_LIBRARY, AlchemistEngine, \
     make_engine_mesh
 from repro.core.expr import AlchemistError, AlFuture, AlMatrix, \
@@ -70,6 +70,12 @@ class AlchemistContext:
     default row-block size for streamed transfers (None = auto-size
     chunks to ~``transfer.DEFAULT_CHUNK_BYTES``).
 
+    ``address="host:port"`` attaches to a *remote* engine served by
+    ``python -m repro.core.server`` instead of an in-process one: the
+    context then holds a :class:`~repro.core.wire.SocketBridge` and the
+    identical protocol bytes cross real TCP frames — nothing else about
+    the façade changes.
+
     Usable as a context manager: ``with AlchemistContext(...) as ac:``
     calls :meth:`stop` on exit, even on error.
     """
@@ -78,8 +84,17 @@ class AlchemistContext:
                  engine: Optional[AlchemistEngine] = None,
                  client_name: str = "", chunk_rows: Optional[int] = None,
                  backend: Optional[str] = None,
-                 fusion: Optional[bool] = None):
-        if engine is None:
+                 fusion: Optional[bool] = None,
+                 address: Optional[str] = None):
+        if address is not None:
+            # remote engine: same façade, the traffic just crosses TCP
+            # (core/wire.py frames to a core/server.py instance)
+            if engine is not None:
+                raise ValueError(
+                    "pass either engine= (in-process) or address= "
+                    "(socket bridge), not both")
+            engine = wire.SocketBridge(address)
+        elif engine is None:
             engine = AlchemistEngine(make_engine_mesh(num_workers))
         self.engine = engine
         self.chunk_rows = chunk_rows
@@ -309,8 +324,21 @@ class AlchemistContext:
                     f"({fut.label or 'routine'}) was fetched; the engine "
                     "drops a session's retained task results at "
                     "disconnect — call result() before stop()")
-        self.engine.handshake(protocol.encode_handshake(protocol.Handshake(
-            action=protocol.DISCONNECT, session=self.session)))
+        wire_bytes = protocol.encode_handshake(protocol.Handshake(
+            action=protocol.DISCONNECT, session=self.session))
+        if isinstance(self.engine, wire.SocketBridge):
+            # this context owns its connection (connection-per-session):
+            # after the disconnect nothing else will cross — hang up. A
+            # server that already went away amounts to the same teardown
+            # (it reclaims the session on its side), so stop() stays
+            # idempotent instead of raising into client cleanup code.
+            try:
+                self.engine.handshake(wire_bytes)
+            except (wire.WireError, OSError):
+                pass
+            self.engine.close()
+        else:
+            self.engine.handshake(wire_bytes)
 
     def _check_alive(self):
         if self._stopped:

@@ -168,6 +168,12 @@ class TransferRecord:
     num_chunks: int = 1
     dedup: bool = False           # upload short-circuited by content match
     logical_nbytes: int = 0       # bytes the dedup'd stream did NOT move
+    # Bytes actually framed onto a TCP socket for this crossing (frame
+    # headers + serialized payload). 0 on the in-memory bridge — there is
+    # no wire — and measured, not modeled, on the socket bridge; ``nbytes``
+    # always keeps the logical payload size so the two bridges stay
+    # directly comparable.
+    wire_nbytes: int = 0
 
 
 class TransferLog:
@@ -188,7 +194,7 @@ class TransferLog:
 
     def record(self, nbytes: int, direction: str, session: int = 0,
                chunk_index: int = 0, num_chunks: int = 1,
-               pipelined=None) -> TransferRecord:
+               pipelined=None, wire_nbytes: int = 0) -> TransferRecord:
         """Log one crossing (one chunk of a streamed send, or a whole
         single-shot send) and return the record with its modeled costs.
 
@@ -212,21 +218,26 @@ class TransferLog:
             session=session,
             chunk_index=chunk_index,
             num_chunks=num_chunks,
+            wire_nbytes=int(wire_nbytes),
         )
         with self._lock:
             self.records.append(rec)
         return rec
 
     def record_dedup(self, logical_nbytes: int, direction: str,
-                     session: int = 0, num_chunks: int = 1) -> TransferRecord:
+                     session: int = 0, num_chunks: int = 1,
+                     wire_nbytes: int = 0) -> TransferRecord:
         """Log a content-dedup'd upload: the stream short-circuited to a
         handle alias, so zero bytes and zero modeled seconds actually
-        crossed; ``logical_nbytes`` is what the stream would have moved."""
+        crossed; ``logical_nbytes`` is what the stream would have moved
+        (over a socket, ``wire_nbytes`` is the tiny fingerprint-lookup
+        frame — never the payload)."""
         rec = TransferRecord(
             nbytes=0, direction=direction, modeled_socket_s=0.0,
             modeled_reshard_s=0.0, session=session, chunk_index=-1,
             num_chunks=num_chunks, dedup=True,
-            logical_nbytes=int(logical_nbytes))
+            logical_nbytes=int(logical_nbytes),
+            wire_nbytes=int(wire_nbytes))
         with self._lock:
             self.records.append(rec)
         return rec
@@ -262,6 +273,71 @@ class TransferLog:
         out["dedup_bytes_saved"] = sum(
             r.logical_nbytes for r in recs if r.dedup)
         return out
+
+
+@dataclasses.dataclass
+class WireStat:
+    """Measured (not modeled) traffic of one wire endpoint: how many
+    frames crossed in each direction and how many bytes they occupied on
+    the socket, frame headers included."""
+    frames_in: int = 0
+    bytes_in: int = 0
+    frames_out: int = 0
+    bytes_out: int = 0
+
+    @property
+    def frames(self) -> int:
+        return self.frames_in + self.frames_out
+
+    @property
+    def bytes(self) -> int:
+        return self.bytes_in + self.bytes_out
+
+
+class WireLog:
+    """Per-endpoint frame/byte accounting for the socket bridge.
+
+    ``engine.endpoint_counts`` deliberately counts *logical* calls — one
+    submit is one crossing however it is carried — and that stays true on
+    every bridge. This log is the physical complement: the socket server
+    (and the client bridge) record here how many frames each logical call
+    actually cost and how many bytes they put on the wire, so the
+    transfer tables can report protocol overhead instead of assuming it.
+    The in-memory bridge never writes one: no socket, no frames.
+    """
+
+    def __init__(self):
+        self._stats: dict[str, WireStat] = {}
+        self._lock = threading.Lock()
+
+    def record(self, endpoint: str, frames_in: int = 0, bytes_in: int = 0,
+               frames_out: int = 0, bytes_out: int = 0) -> None:
+        with self._lock:
+            st = self._stats.setdefault(endpoint, WireStat())
+            st.frames_in += frames_in
+            st.bytes_in += bytes_in
+            st.frames_out += frames_out
+            st.bytes_out += bytes_out
+
+    def stat(self, endpoint: str) -> WireStat:
+        """The (possibly empty) accumulated stat for one endpoint."""
+        with self._lock:
+            return self._stats.get(endpoint, WireStat())
+
+    def stats(self) -> dict[str, WireStat]:
+        """Snapshot of every endpoint's stat (copy — safe to iterate)."""
+        with self._lock:
+            return dict(self._stats)
+
+    @property
+    def total_frames(self) -> int:
+        with self._lock:
+            return sum(s.frames for s in self._stats.values())
+
+    @property
+    def total_bytes(self) -> int:
+        with self._lock:
+            return sum(s.bytes for s in self._stats.values())
 
 
 def percentile(values, q: float) -> float:

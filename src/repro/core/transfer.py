@@ -152,7 +152,16 @@ def to_engine(engine: AlchemistEngine, matrix, name: Optional[str] = None,
     service handing over data, not a socket crossing) and takes the
     direct re-layout path: one ``device_put``, one record, no host
     round trip (and no content hashing).
+
+    ``engine`` may also be a :class:`~repro.core.wire.SocketBridge`: the
+    same chunk plan then crosses as real frames to a remote engine
+    server, and the returned record additionally carries the measured
+    ``wire_nbytes``.
     """
+    if not isinstance(engine, AlchemistEngine):
+        return _to_engine_bridge(engine, matrix, name=name,
+                                 session=session, chunk_rows=chunk_rows,
+                                 dedup=dedup)
     if isinstance(matrix, jax.Array):
         arr = jax.device_put(matrix, engine.dist_sharding(matrix.shape))
         rec = engine.transfer_log.record(arr.nbytes, "to_engine",
@@ -267,6 +276,84 @@ def to_engine(engine: AlchemistEngine, matrix, name: Optional[str] = None,
                       fingerprint=fingerprint), rec
 
 
+def _to_engine_bridge(bridge, matrix, name: Optional[str],
+                      session: int, chunk_rows: Optional[int],
+                      dedup: bool) -> tuple[MatrixHandle, TransferRecord]:
+    """``to_engine`` over a :class:`~repro.core.wire.SocketBridge`: the
+    same chunk plan and the same dedup rules, carried by real frames.
+
+    Differences from the in-process path are exactly the ones a socket
+    forces: chunks are cut purely by ``chunk_rows`` (the client cannot
+    see the remote mesh's shard boundaries — the server re-lays the
+    assembled matrix out itself), and a device-resident ``jax.Array``
+    cannot be handed over by reference, so it crosses as one whole-
+    matrix frame (still a single logged record, like the in-memory
+    direct path). Content fingerprints are computed client-side with the
+    same chunk-boundary-invariant hash, so uploads dedup across bridges.
+    """
+    if isinstance(matrix, jax.Array):
+        src = np.asarray(matrix)
+        return bridge.upload(src.shape, src.dtype, [src],
+                             session=session, name=name, single=True)
+
+    is_rm = isinstance(matrix, RowMatrix)
+    if is_rm:
+        shape = matrix.shape
+        dtype = matrix.dtype
+        src = None
+    else:
+        src = np.asarray(matrix)
+        shape = src.shape
+        dtype = src.dtype
+
+    if len(shape) < 1 or shape[0] == 0:
+        arr = np.asarray(matrix.collect() if is_rm else src)
+        return bridge.upload(arr.shape, arr.dtype, [arr],
+                             session=session, name=name, single=True)
+
+    if chunk_rows is None:
+        chunk_rows = chunk_rows_for(shape, dtype.itemsize)
+    plan = _row_plan(shape[0], chunk_rows, [])
+    num_chunks = len(plan)
+
+    def chunk_stream():
+        if is_rm:
+            return matrix.iter_sized_row_blocks([hi - lo for lo, hi in plan])
+        return (src[lo:hi] for lo, hi in plan)
+
+    fingerprint = None
+    inline_hasher = None
+    if dedup and (not is_rm or matrix.rdd.cached):
+        hasher = caching.ContentHasher(shape, dtype)
+        logical = 0
+        pieces = (matrix.rdd.partition(i)
+                  for i in range(matrix.rdd.num_partitions)) \
+            if is_rm else (src[lo:hi] for lo, hi in plan)
+        for piece in pieces:
+            piece = np.asarray(piece)
+            hasher.update(piece)
+            logical += piece.nbytes
+        fingerprint = hasher.fingerprint()
+        hit = bridge.alias_lookup(fingerprint, shape, session, name,
+                                  logical, num_chunks)
+        if hit is not None:
+            return hit
+    elif dedup:
+        inline_hasher = caching.ContentHasher(shape, dtype)
+
+    def hashed_chunks():
+        for chunk in chunk_stream():
+            chunk = np.ascontiguousarray(chunk)
+            if inline_hasher is not None:
+                inline_hasher.update(chunk)
+            yield chunk
+
+    fp = fingerprint if inline_hasher is None \
+        else (lambda: inline_hasher.fingerprint())
+    return bridge.upload(shape, dtype, hashed_chunks(), session=session,
+                         name=name, num_chunks=num_chunks, fingerprint=fp)
+
+
 def to_client(engine: AlchemistEngine, handle: MatrixHandle,
               num_partitions: int = 8, session: Optional[int] = None,
               chunk_rows: Optional[int] = None
@@ -283,7 +370,13 @@ def to_client(engine: AlchemistEngine, handle: MatrixHandle,
     boundaries so no chunk straddles two blocks): beyond the result's own
     storage, peak host allocation is one chunk — never a whole-matrix
     staging buffer.
+
+    Over a :class:`~repro.core.wire.SocketBridge` the same chunks arrive
+    as FETCH frames and land in the same per-partition blocks.
     """
+    if not isinstance(engine, AlchemistEngine):
+        return _to_client_bridge(engine, handle, num_partitions,
+                                 session=session, chunk_rows=chunk_rows)
     arr = engine.get(handle, session=session)
     sess = SYSTEM_SESSION if session is None else session
     if arr.ndim < 1 or arr.shape[0] == 0:
@@ -324,3 +417,53 @@ def to_client(engine: AlchemistEngine, handle: MatrixHandle,
     rec = _aggregate_record(
         engine.transfer_log, total, "to_client", sess, sizes)
     return RowMatrix.from_blocks(blocks), rec
+
+
+def _to_client_bridge(bridge, handle: MatrixHandle, num_partitions: int,
+                      session: Optional[int], chunk_rows: Optional[int]
+                      ) -> tuple[RowMatrix, TransferRecord]:
+    """``to_client`` over a socket: one FETCH request, a stream of chunk
+    frames written straight into the per-partition blocks (same
+    peak-memory property as the in-process path), and the server's
+    aggregate record — including measured wire bytes — from the END
+    frame."""
+    state: dict = {}
+
+    def on_meta(meta):
+        state["meta"] = meta
+        if meta["whole"]:
+            return
+        psizes = meta["psizes"]
+        pstarts = [0]
+        for s in psizes:
+            pstarts.append(pstarts[-1] + s)
+        state["psizes"] = psizes
+        state["pstarts"] = pstarts
+        state["blocks"] = [None] * len(psizes)
+        state["dtype"] = np.dtype(meta["dtype"])
+        state["tail"] = tuple(meta["shape"][1:])
+
+    def on_chunk(lo, hi, block):
+        meta = state["meta"]
+        if meta["whole"]:
+            state["whole_array"] = block
+            return
+        pstarts = state["pstarts"]
+        blocks = state["blocks"]
+        p = bisect.bisect_right(pstarts, lo) - 1
+        if blocks[p] is None:
+            blocks[p] = np.empty(
+                (state["psizes"][p],) + state["tail"],
+                dtype=state["dtype"])
+        blocks[p][lo - pstarts[p]: hi - pstarts[p]] = block
+
+    # session passes through verbatim: None keeps its in-process meaning
+    # (trusted global lookup) so both bridges resolve identically
+    rec = bridge.fetch(handle, session=session, chunk_rows=chunk_rows,
+                       num_partitions=num_partitions,
+                       on_meta=on_meta, on_chunk=on_chunk)
+    meta = state["meta"]
+    if meta["whole"]:
+        return RowMatrix.from_array(state["whole_array"],
+                                    meta.get("num_partitions", 8)), rec
+    return RowMatrix.from_blocks(state["blocks"]), rec

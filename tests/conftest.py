@@ -1,5 +1,67 @@
 import os
 import sys
 
+import pytest
+
 # src-layout import path (tests run with PYTHONPATH=src, but be robust)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# ---- bridge parametrization -------------------------------------------
+# The protocol suites run twice: once over the in-memory bridge (the
+# engine object itself) and once over real TCP (core/server.py +
+# core/wire.py SocketBridge) — same test bodies, byte-identical protocol
+# traffic, so every session/scheduler/cache/ACI behavior is proven on the
+# transport the paper actually uses. Suites outside this list are
+# bridge-agnostic (they poke engine internals directly) and run once.
+_BRIDGED_SUITES = {
+    "test_sessions_streaming",
+    "test_scheduler_async",
+    "test_cache",
+    "test_aci_api",
+}
+
+
+def pytest_generate_tests(metafunc):
+    if metafunc.module.__name__ in _BRIDGED_SUITES:
+        metafunc.parametrize("bridge_mode", ["inmemory", "socket"],
+                             indirect=True)
+
+
+@pytest.fixture(autouse=True)
+def bridge_mode(request, monkeypatch):
+    """``inmemory`` leaves everything untouched. ``socket`` reroutes
+    every ``AlchemistContext(engine=...)`` construction through a real
+    TCP server wrapped around *the same engine object*: the context
+    talks frames over localhost while the test keeps direct in-process
+    access to the engine for its assertions. One server per distinct
+    engine, started lazily, stopped at test teardown."""
+    mode = getattr(request, "param", "inmemory")
+    if mode != "socket":
+        yield mode
+        return
+
+    from repro.core import wire
+    from repro.core.context import AlchemistContext
+    from repro.core.engine import AlchemistEngine, make_engine_mesh
+    from repro.core.server import AlchemistServer
+
+    servers = {}                       # id(engine) -> AlchemistServer
+    real_init = AlchemistContext.__init__
+
+    def socket_init(self, num_workers=None, engine=None, **kw):
+        if kw.get("address") is not None \
+                or isinstance(engine, wire.SocketBridge):
+            return real_init(self, num_workers=num_workers,
+                             engine=engine, **kw)
+        if engine is None:
+            engine = AlchemistEngine(make_engine_mesh(num_workers))
+        srv = servers.get(id(engine))
+        if srv is None:
+            srv = AlchemistServer(engine=engine).start()
+            servers[id(engine)] = srv
+        return real_init(self, address=srv.address, **kw)
+
+    monkeypatch.setattr(AlchemistContext, "__init__", socket_init)
+    yield mode
+    for srv in servers.values():
+        srv.stop()
