@@ -10,6 +10,7 @@ from benchmarks import (
     backend_fusion,
     cache_amortization,
     chain_pipelining,
+    compile_warmup,
     fig3_weak_scaling,
     kernel_bench,
     multiclient_throughput,
@@ -42,6 +43,9 @@ ALL = {
     # smoke-sized here; the standalone script exposes the full sweep
     "fusion": lambda: (backend_fusion.run([4, 16]),
                        backend_fusion.run_routine_table(dim=96)),
+    # machine-readable output tracked across PRs
+    "compile_warmup": lambda: compile_warmup.run(
+        json_path="BENCH_compile_warmup.json"),
 }
 
 

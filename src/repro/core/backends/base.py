@@ -88,12 +88,26 @@ class RoutineImpl:
     matrix inputs may arrive in (``None`` = any); an operand in a
     foreign layout is redistributed to ``relayout_to`` by the engine
     before the implementation runs.
+
+    ``bucketable`` declares that zero-padding every matrix operand up to
+    a shape bucket provably preserves the result: the logical block of
+    the padded output equals the unpadded output, and pad regions stay
+    zero (so padded values compose through chains). True for the linear
+    kernels (multiply/add/transpose/gram); false for anything whose
+    output *values* depend on operand extents (random generation,
+    tiling, QR/eigendecompositions). ``out_shapes`` is the shape rule
+    that goes with it — ``fn(shapes: dict[param, shape], **scalars) ->
+    dict[output, shape]``, raising on invalid shape combinations — used
+    to crop padded program outputs back to their logical shapes and to
+    enumerate warmup buckets (see ``core/compilecache.py``).
     """
     fn: Callable[..., Any]
     fusible: bool = False
     accepts: Optional[tuple[str, ...]] = None
     relayout_to: str = ROWBLOCK
     kind: str = ARRAY
+    bucketable: bool = False
+    out_shapes: Optional[Callable[..., dict]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,14 +139,26 @@ class PlanStep:
 @dataclasses.dataclass
 class ExecutionPlan:
     """What the engine compiles through a backend: an ordered list of
-    steps where step *i* may reference outputs of steps ``< i``."""
+    steps where step *i* may reference outputs of steps ``< i``.
+
+    ``input_specs`` maps each :class:`Input` slot to its operand's
+    ``(shape, dtype)`` — filled by the engine from the arrays it
+    actually materialized (post-bucketing, when bucketing applies).
+    """
     steps: list[PlanStep]
+    # slot -> (shape tuple, dtype string); None = shapes unknown
+    input_specs: Optional[dict[str, tuple[tuple, str]]] = None
 
     def signature(self) -> Optional[tuple]:
-        """Hashable structural key for compile caching: per step the
-        routine identity plus every arg (scalars by value — they are
-        baked into the trace; placeholders by position). ``None`` when an
-        arg is unhashable (the caller must skip its compile cache)."""
+        """Hashable key for compile caching: per step the routine
+        identity plus every arg (scalars by value — they are baked into
+        the trace; placeholders by position), plus the operand
+        shapes/dtypes when known. Two same-structure plans over
+        different-shaped operands are *different programs* to XLA — a
+        shape-blind key could neither attribute retraces nor address AOT
+        bucket executables, so shapes are part of the identity.
+        ``None`` when an arg is unhashable (the caller must skip its
+        compile cache)."""
         sig = []
         for step in self.steps:
             try:
@@ -142,7 +168,12 @@ class ExecutionPlan:
                 sig.append((step.library, step.routine, args))
             except TypeError:
                 return None
-        return tuple(sig)
+        specs = None
+        if self.input_specs is not None:
+            specs = tuple(sorted(
+                (slot, tuple(int(d) for d in shape), str(dtype))
+                for slot, (shape, dtype) in self.input_specs.items()))
+        return (tuple(sig), specs)
 
 
 def resolve_step_args(step: PlanStep, prior_outputs: list[dict],
@@ -164,6 +195,40 @@ def resolve_step_args(step: PlanStep, prior_outputs: list[dict],
         else:
             kwargs[k] = v
     return kwargs
+
+
+# ---------------------------------------------------------------------------
+# shape rules for the bucketable linear kernels — shared by every backend
+# so the bucketing metadata can never diverge between implementations.
+# Each raises ValueError on shape combinations the routine itself would
+# reject, which is what filters warmup bucket enumeration.
+# ---------------------------------------------------------------------------
+def shapes_multiply(shapes: dict, **_scalars) -> dict:
+    a, b = shapes["A"], shapes["B"]
+    if len(a) != 2 or len(b) != 2 or a[1] != b[0]:
+        raise ValueError(f"multiply needs (n,k)@(k,m), got {a} @ {b}")
+    return {"C": (a[0], b[1])}
+
+
+def shapes_add(shapes: dict, **_scalars) -> dict:
+    a, b = shapes["A"], shapes["B"]
+    if tuple(a) != tuple(b):
+        raise ValueError(f"add expects equal shapes, got {a} and {b}")
+    return {"C": tuple(a)}
+
+
+def shapes_transpose(shapes: dict, **_scalars) -> dict:
+    a = shapes["A"]
+    if len(a) != 2:
+        raise ValueError(f"transpose expects a matrix, got {a}")
+    return {"C": (a[1], a[0])}
+
+
+def shapes_gram(shapes: dict, **_scalars) -> dict:
+    a = shapes["A"]
+    if len(a) != 2:
+        raise ValueError(f"gram expects a matrix, got {a}")
+    return {"G": (a[1], a[1])}
 
 
 class ExecutionBackend(abc.ABC):
@@ -191,7 +256,8 @@ class ExecutionBackend(abc.ABC):
     @classmethod
     def register(cls, library: str, routine: str, *, fusible: bool = False,
                  accepts: Optional[tuple[str, ...]] = None,
-                 relayout_to: str = ROWBLOCK):
+                 relayout_to: str = ROWBLOCK, bucketable: bool = False,
+                 out_shapes: Optional[Callable[..., dict]] = None):
         """Class decorator-factory registering an array-level impl:
         ``@Backend.register("elemental", "gram", fusible=True)``."""
         def wrap(fn):
@@ -201,7 +267,8 @@ class ExecutionBackend(abc.ABC):
                 setattr(cls, "_registered", reg)
             reg[(library, routine)] = RoutineImpl(
                 fn=fn, fusible=fusible, accepts=accepts,
-                relayout_to=relayout_to)
+                relayout_to=relayout_to, bucketable=bucketable,
+                out_shapes=out_shapes)
             return fn
         return wrap
 

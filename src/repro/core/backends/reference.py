@@ -76,12 +76,14 @@ def _replicate_cols(A, times: int):
     return {"A": np.tile(A, (1, times))}
 
 
-@register("elemental", "multiply", accepts=_DENSE)
+@register("elemental", "multiply", accepts=_DENSE,
+          bucketable=True, out_shapes=base.shapes_multiply)
 def _multiply(A, B):
     return {"C": A @ B}
 
 
-@register("elemental", "add", accepts=_DENSE)
+@register("elemental", "add", accepts=_DENSE,
+          bucketable=True, out_shapes=base.shapes_add)
 def _add(A, B):
     if A.shape != B.shape:
         raise ValueError(f"add expects equal shapes, got {tuple(A.shape)} "
@@ -89,12 +91,14 @@ def _add(A, B):
     return {"C": A + B}
 
 
-@register("elemental", "transpose", accepts=_DENSE)
+@register("elemental", "transpose", accepts=_DENSE,
+          bucketable=True, out_shapes=base.shapes_transpose)
 def _transpose(A):
     return {"C": np.ascontiguousarray(A.T)}
 
 
-@register("elemental", "gram", accepts=_DENSE)
+@register("elemental", "gram", accepts=_DENSE,
+          bucketable=True, out_shapes=base.shapes_gram)
 def _gram(A, use_pallas: bool = False):
     # use_pallas is a jax-backend knob; the reference result is the same
     return {"G": A.T @ A}

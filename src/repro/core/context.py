@@ -85,6 +85,7 @@ class AlchemistContext:
                  client_name: str = "", chunk_rows: Optional[int] = None,
                  backend: Optional[str] = None,
                  fusion: Optional[bool] = None,
+                 bucketing: Optional[bool] = None,
                  address: Optional[str] = None):
         if address is not None:
             # remote engine: same façade, the traffic just crosses TCP
@@ -111,9 +112,11 @@ class AlchemistContext:
         # the execution environment this session's commands run in
         # (``core/backends``); ``backend=None`` keeps the engine default
         self.backend = res.values.get("backend", "")
-        if backend is not None or fusion is not None:
+        if backend is not None or fusion is not None or \
+                bucketing is not None:
             try:
-                self.configure(backend=backend, fusion=fusion)
+                self.configure(backend=backend, fusion=fusion,
+                               bucketing=bucketing)
             except AlchemistError:
                 # leave no half-connected session behind a bad backend name
                 self.stop()
@@ -169,21 +172,36 @@ class AlchemistContext:
         return proxy
 
     def configure(self, backend: Optional[str] = None,
-                  fusion: Optional[bool] = None) -> dict:
+                  fusion: Optional[bool] = None,
+                  bucketing: Optional[bool] = None,
+                  warmup=None, cache_dir: Optional[str] = None) -> dict:
         """Select this session's execution environment over the
         ``configure`` protocol endpoint: ``backend`` names a registered
         engine backend (``"jax"`` — the accelerated default — or
         ``"reference"``, the plain-numpy debugging implementation);
         ``fusion=False`` opts the session out of chain fusion (every
-        command dispatches as its own task). Returns — and records on
-        ``self.backend`` — the effective settings; an unknown backend
-        raises :class:`AlchemistError` listing what the engine offers."""
+        command dispatches as its own task); ``bucketing`` opts this
+        session in/out of operand shape bucketing; ``warmup=True`` (or a
+        list of bucket sizes) AOT-compiles the bucketable catalog and
+        indexed hot signatures right now, off the request path;
+        ``cache_dir`` points the engine at a persistent compile cache
+        (engine-wide — XLA executables survive restarts). Returns — and
+        records on ``self.backend`` — the effective settings; an unknown
+        backend raises :class:`AlchemistError` listing what the engine
+        offers."""
         self._check_alive()
         options: dict = {}
         if backend is not None:
             options["backend"] = backend
         if fusion is not None:
             options["fusion"] = fusion
+        if bucketing is not None:
+            options["bucketing"] = bucketing
+        if warmup is not None:
+            options["warmup"] = list(warmup) \
+                if isinstance(warmup, (list, tuple)) else warmup
+        if cache_dir is not None:
+            options["cache_dir"] = cache_dir
         res = protocol.decode_result(self.engine.configure(
             protocol.encode_configure(protocol.Configure(
                 session=self.session, options=options))))

@@ -453,6 +453,99 @@ class TaskLog:
 
 
 @dataclasses.dataclass
+class CompileRecord:
+    """One event on the XLA compile layer (see ``core/compilecache.py``).
+
+    ``event`` is ``"compile"`` (a program was traced+compiled),
+    ``"hit"`` (served from the backend's in-process program cache) or
+    ``"evict"`` (LRU dropped programs). ``on_request_path`` separates
+    the latency that a tenant's call actually absorbed from warmup
+    compiles paid off-path; ``aot`` marks ahead-of-time
+    ``lower().compile()`` compiles (vs a plain ``jax.jit`` that traces
+    at first call); ``bucketed`` marks executions whose operands were
+    padded to the bucket grid — the shapes that collapse onto shared
+    executables. ``session`` is -1 for engine-initiated warmup."""
+    session: int
+    label: str                    # "lib.routine+lib.routine" chain label
+    event: str                    # compile | hit | evict
+    on_request_path: bool = True
+    aot: bool = False
+    bucketed: bool = False
+    steps: int = 1
+    compile_s: float = 0.0
+    count: int = 1                # evicted-program count for "evict"
+
+
+class CompileLog:
+    """Compile-latency accounting — the observability half of the
+    compile cache. Where TaskLog shows queue-vs-execute time, this log
+    shows the third hidden term the paper's overhead argument warns
+    about: XLA trace+compile seconds, and *where* they were paid (on a
+    tenant's first call, or off-path during warmup). The smoke gate in
+    ``benchmarks/compile_warmup.py`` asserts directly on
+    :meth:`stats`: after warmup, ``request_compiles`` for bucketed
+    shapes must be zero."""
+
+    def __init__(self):
+        self.records: list[CompileRecord] = []
+        self._lock = threading.Lock()
+
+    def record(self, session: int, label: str, event: str,
+               on_request_path: bool = True, aot: bool = False,
+               bucketed: bool = False, steps: int = 1,
+               compile_s: float = 0.0, count: int = 1) -> CompileRecord:
+        rec = CompileRecord(session=session, label=label, event=event,
+                            on_request_path=bool(on_request_path),
+                            aot=bool(aot), bucketed=bool(bucketed),
+                            steps=int(steps), compile_s=float(compile_s),
+                            count=int(count))
+        with self._lock:
+            self.records.append(rec)
+        return rec
+
+    @staticmethod
+    def _summarize(recs: list["CompileRecord"]) -> dict:
+        compiles = [r for r in recs if r.event == "compile"]
+        hits = [r for r in recs if r.event == "hit"]
+        request = [r for r in compiles if r.on_request_path]
+        lookups = len(compiles) + len(hits)
+        bucketed = [r for r in recs if r.event in ("compile", "hit")
+                    and r.bucketed]
+        return {
+            "compiles": len(compiles),
+            "hits": len(hits),
+            "hit_rate": len(hits) / lookups if lookups else 0.0,
+            "aot_compiles": sum(1 for r in compiles if r.aot),
+            "request_compiles": len(request),
+            "warmup_compiles": len(compiles) - len(request),
+            "request_compile_s": sum(r.compile_s for r in request),
+            "warmup_compile_s": sum(r.compile_s for r in compiles
+                                    if not r.on_request_path),
+            "bucketed_executions": len(bucketed),
+            "bucketed_request_compiles": sum(
+                1 for r in request if r.bucketed),
+            "evictions": sum(r.count for r in recs if r.event == "evict"),
+        }
+
+    def stats(self) -> dict:
+        """Engine-wide compile accounting across every session."""
+        with self._lock:
+            recs = list(self.records)
+        return self._summarize(recs)
+
+    def session_summary(self, session: int) -> dict:
+        """Compile seconds this session's calls actually absorbed vs
+        cache hits it enjoyed — the p99 story per tenant."""
+        with self._lock:
+            recs = [r for r in self.records if r.session == session]
+        return {"session": session, **self._summarize(recs)}
+
+    def sessions(self) -> list[int]:
+        with self._lock:
+            return sorted({r.session for r in self.records})
+
+
+@dataclasses.dataclass
 class CacheRecord:
     """One cache event on the bridge's amortization layer.
 

@@ -68,9 +68,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import backends as backend_registry
-from repro.core import cache as caching, protocol, scheduler as scheduling
+from repro.core import cache as caching, compilecache, protocol, \
+    scheduler as scheduling
 from repro.core.backends import base as backend_base
-from repro.core.costmodel import CacheLog, TaskLog, TransferLog
+from repro.core.costmodel import CacheLog, CompileLog, TaskLog, TransferLog
 from repro.core.handles import BLOCK2D, LAYOUTS, REPLICATED, ROWBLOCK, \
     MatrixHandle
 from repro.core.libraries import spec as specs
@@ -115,9 +116,12 @@ class Session:
     commands: int = 0
     # execution configuration (the ``configure`` endpoint): which
     # registered backend runs this session's commands ("" = the engine
-    # default), and whether its burst-submitted chains may fuse
+    # default), whether its burst-submitted chains may fuse, and whether
+    # its operands may be padded to the engine's bucket grid (None =
+    # follow the engine default)
     backend: str = ""
     fusion: bool = True
+    bucketing: Optional[bool] = None
 
 
 @dataclasses.dataclass
@@ -212,6 +216,17 @@ class AlchemistEngine:
     execution backend for sessions that never ``configure`` one;
     ``fuse_chains=False`` disables chain claiming engine-wide (every
     command dispatches as its own task — the pre-ABI behaviour).
+
+    Compile-latency subsystem (``core/compilecache.py``):
+    ``compile_cache_dir`` turns on the JAX persistent compilation cache
+    plus the engine-level :class:`~repro.core.compilecache.ExecutableIndex`
+    (compiled programs survive restarts); ``bucketing``/``bucket_grid``
+    set the engine-default shape-bucket policy (sessions override via
+    ``configure``); ``warmup_on_load`` AOT-compiles the bucketable
+    catalog (and every indexed hot signature) in the background whenever
+    a library loads; ``warmup_grid`` is the bucket subset catalog warmup
+    covers; ``program_cache_size`` bounds each backend's in-process
+    compiled-program LRU. ``compile_log`` is the accounting surface.
     """
 
     def __init__(self, mesh: Optional[Mesh] = None,
@@ -220,7 +235,13 @@ class AlchemistEngine:
                  scheduler_workers: int = 4,
                  cache_entries: int = 256,
                  backend: str = backend_registry.DEFAULT_BACKEND,
-                 fuse_chains: bool = True):
+                 fuse_chains: bool = True,
+                 compile_cache_dir: Optional[str] = None,
+                 bucketing: bool = True,
+                 bucket_grid=None,
+                 warmup_on_load: bool = False,
+                 warmup_grid=None,
+                 program_cache_size: Optional[int] = None):
         self.mesh = mesh if mesh is not None else make_engine_mesh()
         self.num_workers = self.mesh.devices.size
         self.memory_budget_bytes = memory_budget_bytes
@@ -260,6 +281,24 @@ class AlchemistEngine:
         self.cache = caching.RoutineCache(cache_entries) \
             if cache_entries else None
         self.cache_log = CacheLog()
+        # ---- compile-latency subsystem (core/compilecache.py) ----
+        self.bucket_policy = compilecache.BucketPolicy(
+            grid=tuple(bucket_grid) if bucket_grid is not None
+            else compilecache.DEFAULT_BUCKET_GRID,
+            enabled=bool(bucketing))
+        self.warmup_grid = tuple(warmup_grid) if warmup_grid is not None \
+            else compilecache.DEFAULT_WARMUP_GRID
+        self.warmup_on_load = bool(warmup_on_load)
+        self.compile_log = CompileLog()
+        self.compile_cache_dir: Optional[str] = None
+        self._exec_index: Optional[compilecache.ExecutableIndex] = None
+        self._warmup_threads: list[threading.Thread] = []
+        if program_cache_size is not None:
+            for be in self.backends.values():
+                if hasattr(be, "max_programs"):
+                    be.max_programs = int(program_cache_size)
+        if compile_cache_dir:
+            self._set_cache_dir(compile_cache_dir)
         # Session 0 is the always-present system namespace: in-process
         # callers (engine-side services, the trainer) that bypass the
         # protocol operate in it.
@@ -323,6 +362,7 @@ class AlchemistEngine:
         (in-flight tasks finish, queued ones fail) and drop every
         resident matrix. After this the engine accepts no more commands;
         construct a new one to continue. Idempotent."""
+        self.wait_warmup()
         self.scheduler.shutdown()
         with self._state_lock:
             self._task_meta.clear()
@@ -393,6 +433,11 @@ class AlchemistEngine:
                     self.cache_log.record(entry.session, entry.label,
                                           "invalidate")
                     self._release_entry_outputs(entry)
+        if self.warmup_on_load:
+            # AOT-compile the (possibly grown) bucketable catalog and
+            # every indexed hot signature off-thread — by the time a
+            # tenant submits a bucketed shape, the executable exists
+            self._start_warmup()
 
     def libraries(self) -> list[str]:
         return sorted(self._libraries)
@@ -435,9 +480,14 @@ class AlchemistEngine:
     def configure(self, wire: bytes) -> bytes:
         """Protocol endpoint for session configuration: select the
         execution backend this session's commands run in (validated
-        against the registry) and/or toggle chain fusion. Replies with
-        the *effective* settings; unknown option keys are an error — a
-        typo must not silently configure nothing."""
+        against the registry), toggle chain fusion or shape
+        ``bucketing``, point the engine at a persistent compile
+        ``cache_dir``, and/or trigger an AOT ``warmup`` pass (True =
+        default bucket grid; a list of ints = that grid) — the warmup
+        runs synchronously here, at configure time, which is exactly the
+        off-request-path moment the compile latency belongs in. Replies
+        with the *effective* settings; unknown option keys are an error
+        — a typo must not silently configure nothing."""
         with self._state_lock:
             self.endpoint_counts["configure"] += 1
         try:
@@ -447,11 +497,13 @@ class AlchemistEngine:
                     "the system session cannot be configured; connect() "
                     "a session first")
             sess = self.session(cfg.session)     # raises if unknown
-            unknown = sorted(set(cfg.options) - {"backend", "fusion"})
+            supported = {"backend", "fusion", "bucketing", "warmup",
+                         "cache_dir"}
+            unknown = sorted(set(cfg.options) - supported)
             if unknown:
                 raise ValueError(
                     f"unknown configure option(s) {unknown}; supported: "
-                    "backend, fusion")
+                    f"{', '.join(sorted(supported))}")
             # validate every option BEFORE mutating anything: a request
             # that errors must not half-apply (the client treats an
             # error reply as "nothing changed")
@@ -464,16 +516,53 @@ class AlchemistEngine:
             if "fusion" in cfg.options and \
                     not isinstance(cfg.options["fusion"], bool):
                 raise TypeError("configure option 'fusion' must be a bool")
+            if "bucketing" in cfg.options and \
+                    not isinstance(cfg.options["bucketing"], bool):
+                raise TypeError(
+                    "configure option 'bucketing' must be a bool")
+            warmup_grid = None
+            if "warmup" in cfg.options:
+                w = cfg.options["warmup"]
+                if isinstance(w, (list, tuple)):
+                    if not w or not all(
+                            isinstance(b, int) and not isinstance(b, bool)
+                            and b > 0 for b in w):
+                        raise TypeError(
+                            "configure option 'warmup' as a list must "
+                            "hold positive bucket sizes")
+                    warmup_grid = tuple(w)
+                elif not isinstance(w, bool):
+                    raise TypeError(
+                        "configure option 'warmup' must be a bool or a "
+                        "list of bucket sizes")
+            if "cache_dir" in cfg.options and \
+                    not isinstance(cfg.options["cache_dir"], str):
+                raise TypeError(
+                    "configure option 'cache_dir' must be a str path")
             with self._state_lock:
                 if "backend" in cfg.options:
                     sess.backend = cfg.options["backend"]
                 if "fusion" in cfg.options:
                     sess.fusion = cfg.options["fusion"]
+                if "bucketing" in cfg.options:
+                    sess.bucketing = cfg.options["bucketing"]
+                if "cache_dir" in cfg.options:
+                    # engine-wide by nature (the JAX disk cache is a
+                    # process-global config) — documented, not hidden
+                    self._set_cache_dir(cfg.options["cache_dir"])
                 effective = {
                     "session": sess.id,
                     "backend": sess.backend or self.default_backend,
                     "fusion": sess.fusion,
+                    "bucketing": sess.bucketing
+                    if sess.bucketing is not None
+                    else self.bucket_policy.enabled,
+                    "cache_dir": self.compile_cache_dir or "",
                 }
+            if cfg.options.get("warmup"):
+                effective["warmup"] = self.warmup(
+                    backend=effective["backend"], grid=warmup_grid,
+                    session=sess.id)
             return protocol.encode_result(protocol.Result(
                 values=effective, session=cfg.session))
         except Exception as e:
@@ -488,6 +577,211 @@ class AlchemistEngine:
         if sess is None or not sess.backend:
             return self.default_backend
         return sess.backend
+
+    # ---- compile-latency subsystem (shape buckets + AOT + persistence) ----
+    def _set_cache_dir(self, cache_dir: str) -> None:
+        """Point the engine at a persistent compile cache dir: JAX's disk
+        cache (XLA executables survive restarts) plus the engine-level
+        executable index over it. Engine-wide: the JAX knob is a
+        process-global config."""
+        self.compile_cache_dir = cache_dir
+        compilecache.enable_persistent_cache(cache_dir)
+        self._exec_index = compilecache.ExecutableIndex(cache_dir)
+
+    def _session_policy(self, sess: Optional[Session]
+                        ) -> compilecache.BucketPolicy:
+        """The bucket policy effective for one session (its override, or
+        the engine default)."""
+        if sess is None or sess.bucketing is None or \
+                sess.bucketing == self.bucket_policy.enabled:
+            return self.bucket_policy
+        return dataclasses.replace(self.bucket_policy,
+                                   enabled=sess.bucketing)
+
+    def _prepare_program(self, backend: backend_base.ExecutionBackend,
+                         plan: backend_base.ExecutionPlan,
+                         inputs: dict[str, Any], sess: Session
+                         ) -> tuple[Any, dict[str, Any],
+                                    Optional[list[dict[str, tuple]]]]:
+        """Compile front-end shared by the fused-chain and bucketed
+        single-step paths: decide bucket eligibility, zero-pad operands
+        up to the session's bucket grid, stamp the plan's ``input_specs``
+        (so the program is AOT-compiled and shape-keyed), compile through
+        the backend's instrumented path, and account every
+        compile/hit/evict in ``compile_log``. Returns ``(program,
+        run_inputs, crops)`` where ``crops`` is the per-step
+        logical-output-shape list to crop padded results back with
+        (``None`` = nothing padded, outputs land as produced)."""
+        if not hasattr(backend, "get_or_compile"):
+            return backend.compile(plan), inputs, None
+        policy = self._session_policy(sess)
+        run_inputs = inputs
+        crops: Optional[list[dict[str, tuple]]] = None
+        bucketed = False
+        if policy.enabled and hasattr(backend, "pad_to") and \
+                compilecache.plan_bucketable(plan):
+            logical = {s: tuple(a.shape) for s, a in inputs.items()}
+            padded = {s: policy.bucket_shape(sh)
+                      for s, sh in logical.items()}
+            crops = compilecache.propagate_shapes(plan, logical)
+            if crops is not None and compilecache.propagate_shapes(
+                    plan, padded) is not None:
+                # pad/crop stay OUTSIDE the compiled program: inside the
+                # trace they would bake the logical shapes into the key,
+                # defeating the bucket collapse
+                run_inputs = {s: backend.pad_to(a, padded[s])
+                              for s, a in inputs.items()}
+                bucketed = True
+            else:
+                crops = None    # rule rejected: run exact, real error
+        plan.input_specs = {s: (tuple(a.shape), str(a.dtype))
+                            for s, a in run_inputs.items()}
+        program, info = backend.get_or_compile(plan)
+        self._account_compile(backend, plan, info,
+                              session=sess.id if sess else SYSTEM_SESSION,
+                              bucketed=bucketed, on_request_path=True)
+        return program, run_inputs, crops
+
+    def _crop_outputs(self, backend: backend_base.ExecutionBackend,
+                      outs_list: list[dict],
+                      crops: list[dict[str, tuple]]) -> list[dict]:
+        """Slice every padded program output back to its logical shape
+        (per the plan's propagated shape rules)."""
+        cropped = []
+        for outs, shapes in zip(outs_list, crops):
+            cropped.append({
+                k: backend.crop_to(v, shapes[k])
+                if k in shapes and backend.is_array(v) else v
+                for k, v in outs.items()})
+        return cropped
+
+    def _account_compile(self, backend: backend_base.ExecutionBackend,
+                         plan: backend_base.ExecutionPlan, info: dict,
+                         session: int, bucketed: bool,
+                         on_request_path: bool) -> None:
+        """Record one program lookup in ``compile_log`` and — for fresh
+        AOT compiles — in the executable index (how hot signatures
+        register themselves for the next warmup)."""
+        label = compilecache.plan_label(plan)
+        if info["cached"]:
+            self.compile_log.record(session, label, "hit",
+                                    on_request_path=on_request_path,
+                                    bucketed=bucketed,
+                                    steps=len(plan.steps))
+        else:
+            self.compile_log.record(session, label, "compile",
+                                    on_request_path=on_request_path,
+                                    aot=info["aot"], bucketed=bucketed,
+                                    steps=len(plan.steps),
+                                    compile_s=info["compile_s"])
+            if self._exec_index is not None and info["aot"]:
+                self._exec_index.record(backend.name, plan,
+                                        info["compile_s"])
+        if info.get("evicted"):
+            self.compile_log.record(session, label, "evict",
+                                    on_request_path=on_request_path,
+                                    count=info["evicted"])
+
+    def warmup(self, backend: Optional[str] = None, grid=None,
+               session: int = -1) -> dict:
+        """AOT-compile the programs tenant traffic will ask for, off the
+        request path: (1) every hot signature in the executable index
+        (plans compiled by any earlier run against this cache dir — the
+        re-lower hits JAX's disk cache, so a warm restart replays
+        without recompiling); (2) every bucketable fusible cataloged
+        routine at each valid combination of the warmup bucket grid.
+        Returns counts; every compile lands in ``compile_log`` with
+        ``on_request_path=False``."""
+        name = backend or self.default_backend
+        be = self.backends.get(name)
+        stats = {"backend": name, "catalog": 0, "replayed": 0,
+                 "compiled": 0, "cached": 0, "warmup_s": 0.0}
+        if be is None or not getattr(be, "supports_aot", False):
+            return stats
+        t_start = time.perf_counter()
+        grid_t = tuple(int(g) for g in (grid or self.warmup_grid))
+
+        def compile_plan(plan, bucketed):
+            program, info = be.get_or_compile(plan)
+            stats["cached" if info["cached"] else "compiled"] += 1
+            self._account_compile(be, plan, info, session=session,
+                                  bucketed=bucketed,
+                                  on_request_path=False)
+
+        # replay the index FIRST — previously-served signatures are
+        # known-hot (real traffic), and replaying before the catalog
+        # phase keeps "replayed" from counting combos the catalog pass
+        # itself just recorded
+        if self._exec_index is not None:
+            for rec in self._exec_index.entries(backend=name):
+                plan = compilecache.plan_from_record(rec, be)
+                if plan is None:
+                    continue          # routine no longer registered
+                stats["replayed"] += 1
+                compile_plan(plan, bucketed=False)
+        for lib, rn in be.routines():
+            impl = be.routine_impl(lib, rn)
+            if not (impl.kind == backend_base.ARRAY and impl.fusible
+                    and impl.bucketable and impl.out_shapes is not None):
+                continue
+            params = compilecache.matrix_params_of(impl)
+            for combo in compilecache.warmup_shape_sets(
+                    impl, params, grid_t):
+                slots: dict[str, tuple] = {}
+                args: dict[str, Any] = {}
+                for k in params:
+                    slot = f"i{len(slots)}"
+                    slots[slot] = combo[k]
+                    args[k] = backend_base.Input(slot)
+                plan = backend_base.ExecutionPlan(
+                    steps=[backend_base.PlanStep(
+                        library=lib, routine=rn, args=args, impl=impl)],
+                    input_specs={s: (tuple(sh), "float32")
+                                 for s, sh in slots.items()})
+                stats["catalog"] += 1
+                compile_plan(plan, bucketed=True)
+        stats["warmup_s"] = time.perf_counter() - t_start
+        return stats
+
+    def _start_warmup(self) -> None:
+        """Kick a background warmup (the ``warmup_on_load`` path): the
+        load_library reply returns immediately while the catalog
+        compiles off-thread; ``wait_warmup`` joins."""
+        t = threading.Thread(target=self._warmup_quiet, daemon=True,
+                             name="alchemist-warmup")
+        with self._state_lock:
+            self._warmup_threads.append(t)
+        t.start()
+
+    def _warmup_quiet(self) -> None:
+        try:
+            self.warmup()
+        except Exception:
+            pass        # warmup is an optimization; never fail a load
+
+    def wait_warmup(self) -> None:
+        """Block until every background warmup kicked so far finished."""
+        with self._state_lock:
+            threads = list(self._warmup_threads)
+        for t in threads:
+            t.join()
+        with self._state_lock:
+            self._warmup_threads = [t for t in self._warmup_threads
+                                    if t.is_alive()]
+
+    def compile_stats(self) -> dict:
+        """Engine-wide compile accounting: the CompileLog summary plus
+        each backend's live program-cache occupancy/evictions and the
+        executable-index size — what benchmarks and session stats
+        surface."""
+        out = self.compile_log.stats()
+        out["executable_index"] = len(self._exec_index) \
+            if self._exec_index is not None else 0
+        out["program_caches"] = {
+            n: be.program_cache_info()
+            for n, be in self.backends.items()
+            if hasattr(be, "program_cache_info")}
+        return out
 
     # ---- handle lifecycle (bindings over refcounted stores) ----
     def put(self, array: jax.Array, name: Optional[str] = None,
@@ -1281,12 +1575,36 @@ class AlchemistEngine:
             view = SessionView(self, sess)
             return impl.fn(view, **cmd.args)
         kwargs = {}
+        inputs: dict[str, Any] = {}
+        plan_args: dict[str, Any] = {}
         for k, v in cmd.args.items():
             if isinstance(v, MatrixHandle):
-                kwargs[k] = self._materialize_arg(v, cmd.session, backend,
-                                                  impl, meta)
+                arr = self._materialize_arg(v, cmd.session, backend,
+                                            impl, meta)
+                kwargs[k] = arr
+                slot = f"i{len(inputs)}"
+                inputs[slot] = arr
+                plan_args[k] = backend_base.Input(slot)
             else:
                 kwargs[k] = v
+                plan_args[k] = v
+        if (impl.fusible and impl.bucketable and inputs
+                and self._session_policy(sess).enabled
+                and hasattr(backend, "get_or_compile")):
+            # bucket-eligible single op: run through the (AOT-warmed,
+            # shape-keyed) program cache instead of eager dispatch, so
+            # a padded tenant shape hits a pre-compiled bucket
+            # executable instead of tracing on its first call
+            plan = backend_base.ExecutionPlan(steps=[
+                backend_base.PlanStep(library=cmd.library,
+                                      routine=cmd.routine,
+                                      args=plan_args, impl=impl)])
+            program, run_inputs, crops = self._prepare_program(
+                backend, plan, inputs, sess)
+            outs_list = program(run_inputs)
+            if crops is not None:
+                outs_list = self._crop_outputs(backend, outs_list, crops)
+            return self._bind_outputs(backend, outs_list[0], cmd)
         outs = impl.fn(**kwargs)
         return self._bind_outputs(backend, outs, cmd)
 
@@ -1437,9 +1755,12 @@ class AlchemistEngine:
                           for k, v in c.args.items()},
                     impl=step_impl))
             plan = backend_base.ExecutionPlan(steps=steps)
-            program = backend.compile(plan)
+            program, run_inputs, crops = self._prepare_program(
+                backend, plan, inputs, sess)
             t0 = time.perf_counter()
-            outs_list = program(inputs)
+            outs_list = program(run_inputs)
+            if crops is not None:
+                outs_list = self._crop_outputs(backend, outs_list, crops)
             elapsed = time.perf_counter() - t0
         except Exception:
             # fused lowering/execution failed; re-run with eager,
@@ -1474,6 +1795,22 @@ class AlchemistEngine:
                     lead_wire = wire
                 else:
                     t = chain[i - 1]
+                    if i == len(cmds) - 1:
+                        # the chain tail is what the client is waiting
+                        # on, but the lead only completes when this body
+                        # returns to its worker — record the lead NOW
+                        # (its own step already delivered) so observing
+                        # the tail's result implies the full chain's
+                        # accounting is readable
+                        with self._state_lock:
+                            meta["recorded"] = True
+                        self.task_log.record(
+                            session=task.session, label=task.label,
+                            state=scheduling.DONE, wait_s=task.wait_s,
+                            exec_s=time.perf_counter() - task.started_at,
+                            fused_ops=meta.get("ops", 1), absorbed=False,
+                            relayouts=meta.get("relayouts", 0),
+                            relayout_bytes=meta.get("relayout_bytes", 0))
                     with self._state_lock:
                         self._task_meta[t.id] = {"absorbed": True}
                     self.scheduler.finish_claimed(t.id, wire)
@@ -1609,14 +1946,34 @@ class AlchemistEngine:
         view._engine.load_library(name, importlib.import_module(module))
         return {"library": name, "loaded": True}
 
-    _BUILTINS = {"load_library": _builtin_load_library}
+    @specs.routine(outputs=())
+    def _builtin_compile_stats(view):
+        """Wire path for compile accounting: the engine-wide CompileLog
+        summary (traces, AOT vs on-demand, bucket hit-rate, compile
+        seconds on/off the request path) plus program-cache occupancy
+        and executable-index size under ``"engine"``, and the calling
+        session's own compile summary under ``"session"`` — how a tenant
+        checks whether its traffic is being absorbed by warmed buckets."""
+        eng = view._engine
+        return {"engine": eng.compile_stats(),
+                "session": eng.compile_log.session_summary(view.session.id)}
+
+    _BUILTINS = {"load_library": _builtin_load_library,
+                 "compile_stats": _builtin_compile_stats}
 
     def _record_task(self, task: scheduling.Task) -> None:
         """Scheduler completion hook -> per-task cost accounting,
         including the backend-ABI execution metadata (fused op count,
-        absorbed flag, relayout count/bytes) staged by the task body."""
+        absorbed flag, relayout count/bytes) staged by the task body.
+
+        A fused chain's lead is recorded early by :meth:`_run_fused`
+        (before the chain tail's result is released) so a client that
+        observed the tail also observes the whole chain's accounting —
+        skip the duplicate here."""
         with self._state_lock:
             meta = self._task_meta.pop(task.id, None) or {}
+        if meta.get("recorded"):
+            return
         self.task_log.record(
             session=task.session, label=task.label, state=task.state,
             wait_s=task.wait_s, exec_s=task.exec_s,

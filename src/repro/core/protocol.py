@@ -112,11 +112,15 @@ class Configure:
     """Session configuration: select the execution environment this
     session's commands run in. ``options`` currently understands
     ``backend`` (a registered backend name, e.g. ``"jax"`` /
-    ``"reference"``) and ``fusion`` (bool; opt a session out of chain
-    fusion, e.g. to benchmark the unfused dispatch path). The engine
-    validates against its backend registry and echoes the effective
-    settings; unknown option keys are rejected — a typo must not
-    silently configure nothing."""
+    ``"reference"``), ``fusion`` (bool; opt a session out of chain
+    fusion, e.g. to benchmark the unfused dispatch path), ``bucketing``
+    (bool; opt this session in/out of operand shape bucketing),
+    ``warmup`` (True, or a list of bucket sizes: AOT-compile the
+    bucketable catalog + indexed hot signatures now, off the request
+    path), and ``cache_dir`` (str; engine-wide persistent compile cache
+    directory — see ``core/compilecache.py``). The engine validates
+    every option and echoes the effective settings; unknown option keys
+    are rejected — a typo must not silently configure nothing."""
     session: int
     options: dict[str, Any] = dataclasses.field(default_factory=dict)
 

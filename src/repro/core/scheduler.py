@@ -496,12 +496,14 @@ class TaskScheduler:
                     self._readers.pop(h, None)
             if self.on_finish is not None:
                 self._finished.append(task)    # ordered under the lock
-            self._cv.notify_all()
-        # Deliver on_finish strictly in completion order: completions
-        # enqueue under the scheduler lock above, and whichever worker
-        # holds the callback lock drains the queue head-first (a worker
-        # may deliver another worker's completion — order is what's
-        # guaranteed, not the delivering thread).
+        # Deliver on_finish strictly in completion order, and BEFORE
+        # waking waiters: a client unblocked by this completion must be
+        # able to read the task's cost record the moment it holds the
+        # result (TaskLog accounting is part of the observable outcome).
+        # Completions enqueue under the scheduler lock above, and
+        # whichever worker holds the callback lock drains the queue
+        # head-first (a worker may deliver another worker's completion —
+        # order is what's guaranteed, not the delivering thread).
         if self.on_finish is not None:
             with self._cb_lock:
                 while True:
@@ -513,3 +515,5 @@ class TaskScheduler:
                         self.on_finish(done)
                     except Exception:   # accounting must never kill a
                         pass            # worker
+        with self._cv:
+            self._cv.notify_all()

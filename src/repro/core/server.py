@@ -523,9 +523,35 @@ def main(argv: Optional[list[str]] = None) -> int:
     ap.add_argument("--port", type=int, default=DEFAULT_PORT)
     ap.add_argument("--workers", type=int, default=None,
                     help="engine mesh size (default: all local devices)")
+    ap.add_argument("--compile-cache-dir", default=None,
+                    help="persist compiled XLA executables here (plus the "
+                    "engine's executable index) so restarts skip "
+                    "recompiling — see core/compilecache.py")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile the bucketable catalog and every "
+                    "indexed hot signature before accepting traffic "
+                    "(and again, in the background, on library loads)")
+    ap.add_argument("--no-bucketing", action="store_true",
+                    help="disable shape bucketing engine-wide (every "
+                    "operand shape compiles its own program)")
+    ap.add_argument("--program-cache-size", type=int, default=None,
+                    help="bound on live compiled programs per backend "
+                    "(LRU; default 128)")
     args = ap.parse_args(argv)
-    server = AlchemistServer(host=args.host, port=args.port,
-                             num_workers=args.workers).start()
+    engine = AlchemistEngine(
+        make_engine_mesh(args.workers),
+        compile_cache_dir=args.compile_cache_dir,
+        bucketing=not args.no_bucketing,
+        warmup_on_load=args.warmup,
+        program_cache_size=args.program_cache_size)
+    if args.warmup:
+        stats = engine.warmup()
+        print(f"warmup: {stats['compiled']} compiled, "
+              f"{stats['cached']} cached, {stats['replayed']} replayed "
+              f"from index in {stats['warmup_s']:.2f}s", flush=True)
+    server = AlchemistServer(engine=engine, host=args.host,
+                             port=args.port).start()
+    server._owns_engine = True      # main() built it: shut it down on stop
     print(f"alchemist engine serving on {server.address} "
           f"({server.engine.num_workers} workers); Ctrl-C to stop",
           flush=True)
