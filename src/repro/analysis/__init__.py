@@ -1,0 +1,49 @@
+"""repro.analysis — machine-checked invariants for the offload stack.
+
+After seven PRs the repo has exactly the seams the Cray deployment
+study (Rothauge et al. 2019) says production Alchemist failures come
+from — transport, sessions, concurrent tenants — and until this package
+every invariant guarding them lived in docstrings and reviewer memory.
+This package turns them into executable checks, in two halves:
+
+* a **static lint pass** (``python -m repro.analysis``) of
+  repo-specific AST/introspection rules: catalog parity between the
+  spec-only library catalog and every registered backend
+  (``rules_catalog``), wire-frame exhaustiveness and bridge surface
+  parity (``rules_wire``), trace purity inside jitted/Pallas functions,
+  no-pickle-on-wire, and raw-lock discipline (``rules_source``). Each
+  rule emits stable finding IDs with file:line anchors, gated against a
+  committed baseline (``findings``) so the suite ratchets.
+
+* a **dynamic lock-order race detector** (``locktrace``): named,
+  rank-annotated lock factories the core layers construct their locks
+  through. Zero overhead when ``REPRO_LOCK_TRACE`` is unset (the
+  factories return plain ``threading`` primitives); when set, every
+  acquisition feeds a process-wide lock-order graph checked for cycles
+  (potential deadlocks), rank inversions against the documented
+  engine -> scheduler -> backend -> costmodel order, and
+  condition-waits entered while other locks are held.
+
+This module must stay import-light: ``repro.core`` imports
+``repro.analysis.locktrace`` for its lock factories, while the rule
+modules import ``repro.core`` — keeping the rules out of this namespace
+at import time is what makes that non-circular.
+"""
+
+__all__ = ["locktrace", "findings", "run_all_rules"]
+
+
+def run_all_rules(**overrides):
+    """Run every static rule against the real tree (lazy import — see
+    module docstring). Returns a list of :class:`findings.Finding`."""
+    from repro.analysis import rules_catalog, rules_source, rules_wire
+    out = []
+    out.extend(rules_catalog.check_catalog_parity(**{
+        k: v for k, v in overrides.items()
+        if k in ("libraries", "backends")}))
+    out.extend(rules_wire.check_wire_exhaustiveness())
+    out.extend(rules_wire.check_bridge_parity())
+    out.extend(rules_source.check_trace_purity())
+    out.extend(rules_source.check_no_pickle())
+    out.extend(rules_source.check_lock_discipline())
+    return out

@@ -28,12 +28,13 @@ ARPACK driving distributed matvecs in the paper's MPI implementation.
 from __future__ import annotations
 
 import collections
-import threading
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.analysis import locktrace
 
 from repro.core.backends import base
 from repro.core.backends.base import REPLICATED, ROWBLOCK
@@ -76,7 +77,7 @@ class JaxBackend(base.ExecutionBackend):
         # constants), and so are operand shapes/dtypes via input_specs
         self._programs: "collections.OrderedDict[tuple, object]" = \
             collections.OrderedDict()
-        self._programs_lock = threading.Lock()
+        self._programs_lock = locktrace.make_lock("backend.programs")
         self.max_programs = int(max_programs)
         #: programs dropped by the LRU bound since construction
         self.evictions = 0

@@ -63,7 +63,7 @@ register = ReferenceBackend.register
 # ---------------------------------------------------------------------------
 # elemental
 # ---------------------------------------------------------------------------
-@register("elemental", "random_matrix", accepts=_DENSE)
+@register("elemental", "random_matrix", fusible=True, accepts=_DENSE)
 def _random_matrix(rows: int, cols: int, seed: int = 0, scale: float = 1.0,
                    name: str = "random"):
     rng = np.random.default_rng(seed)
@@ -71,18 +71,18 @@ def _random_matrix(rows: int, cols: int, seed: int = 0, scale: float = 1.0,
     return {"A": a}
 
 
-@register("elemental", "replicate_cols", accepts=_DENSE)
+@register("elemental", "replicate_cols", fusible=True, accepts=_DENSE)
 def _replicate_cols(A, times: int):
     return {"A": np.tile(A, (1, times))}
 
 
-@register("elemental", "multiply", accepts=_DENSE,
+@register("elemental", "multiply", fusible=True, accepts=_DENSE,
           bucketable=True, out_shapes=base.shapes_multiply)
 def _multiply(A, B):
     return {"C": A @ B}
 
 
-@register("elemental", "add", accepts=_DENSE,
+@register("elemental", "add", fusible=True, accepts=_DENSE,
           bucketable=True, out_shapes=base.shapes_add)
 def _add(A, B):
     if A.shape != B.shape:
@@ -91,20 +91,20 @@ def _add(A, B):
     return {"C": A + B}
 
 
-@register("elemental", "transpose", accepts=_DENSE,
+@register("elemental", "transpose", fusible=True, accepts=_DENSE,
           bucketable=True, out_shapes=base.shapes_transpose)
 def _transpose(A):
     return {"C": np.ascontiguousarray(A.T)}
 
 
-@register("elemental", "gram", accepts=_DENSE,
+@register("elemental", "gram", fusible=True, accepts=_DENSE,
           bucketable=True, out_shapes=base.shapes_gram)
 def _gram(A, use_pallas: bool = False):
     # use_pallas is a jax-backend knob; the reference result is the same
     return {"G": A.T @ A}
 
 
-@register("elemental", "qr", accepts=_DENSE)
+@register("elemental", "qr", fusible=True, accepts=_DENSE)
 def _qr(A):
     q, r = np.linalg.qr(A, mode="reduced")
     return {"Q": q, "R": r}
@@ -160,7 +160,7 @@ def _truncated_svd(A, k: int, oversample: int = 32, max_iters: int = 0,
             "lanczos_iters": iters, "matvecs": matvecs}
 
 
-@register("elemental", "gram_svd", accepts=_DENSE)
+@register("elemental", "gram_svd", fusible=True, accepts=_DENSE)
 def _gram_svd(A, k: int, use_pallas: bool = False):
     g = np.asarray(A.T @ A, np.float64)
     evals, evecs = np.linalg.eigh(g)

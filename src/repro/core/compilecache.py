@@ -47,8 +47,9 @@ import hashlib
 import json
 import os
 import tempfile
-import threading
 from typing import Any, Iterable, Optional
+
+from repro.analysis import locktrace
 
 from repro.core.backends import base as backend_base
 
@@ -288,7 +289,7 @@ class ExecutableIndex:
 
     def __init__(self, cache_dir: str):
         self.path = os.path.join(cache_dir, self.FILENAME)
-        self._lock = threading.Lock()
+        self._lock = locktrace.make_lock("compilecache.index")
         self._records: dict[str, dict] = {}
         self._load()
 

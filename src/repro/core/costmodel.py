@@ -18,7 +18,8 @@ calibration error is always visible.
 from __future__ import annotations
 
 import dataclasses
-import threading
+
+from repro.analysis import locktrace
 
 GB = 1e9
 
@@ -190,7 +191,7 @@ class TransferLog:
         self.engine_procs = engine_procs
         self.chips = chips
         self.records: list[TransferRecord] = []
-        self._lock = threading.Lock()
+        self._lock = locktrace.make_lock("costmodel.transfer")
 
     def record(self, nbytes: int, direction: str, session: int = 0,
                chunk_index: int = 0, num_chunks: int = 1,
@@ -308,7 +309,7 @@ class WireLog:
 
     def __init__(self):
         self._stats: dict[str, WireStat] = {}
-        self._lock = threading.Lock()
+        self._lock = locktrace.make_lock("costmodel.wire")
 
     def record(self, endpoint: str, frames_in: int = 0, bytes_in: int = 0,
                frames_out: int = 0, bytes_out: int = 0) -> None:
@@ -388,7 +389,7 @@ class TaskLog:
 
     def __init__(self):
         self.records: list[TaskRecord] = []
-        self._lock = threading.Lock()
+        self._lock = locktrace.make_lock("costmodel.task")
 
     def record(self, session: int, label: str, state: str,
                wait_s: float, exec_s: float, fused_ops: int = 1,
@@ -488,7 +489,7 @@ class CompileLog:
 
     def __init__(self):
         self.records: list[CompileRecord] = []
-        self._lock = threading.Lock()
+        self._lock = locktrace.make_lock("costmodel.compile")
 
     def record(self, session: int, label: str, event: str,
                on_request_path: bool = True, aot: bool = False,
@@ -570,7 +571,7 @@ class CacheLog:
 
     def __init__(self):
         self.records: list[CacheRecord] = []
-        self._lock = threading.Lock()
+        self._lock = locktrace.make_lock("costmodel.cache")
 
     def record(self, session: int, label: str, event: str,
                saved_s: float = 0.0, bytes_saved: int = 0) -> CacheRecord:

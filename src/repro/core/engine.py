@@ -67,6 +67,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.analysis import locktrace
 from repro.core import backends as backend_registry
 from repro.core import cache as caching, compilecache, protocol, \
     scheduler as scheduling
@@ -306,7 +307,7 @@ class AlchemistEngine:
             SYSTEM_SESSION: Session(id=SYSTEM_SESSION, client="system")}
         self._session_ids = itertools.count(1)
         self._clock = itertools.count(1)
-        self._state_lock = threading.RLock()
+        self._state_lock = locktrace.make_rlock("engine.state")
         self.scheduler = scheduling.TaskScheduler(
             num_workers=scheduler_workers, on_finish=self._record_task)
 

@@ -49,6 +49,8 @@ import threading
 import time
 from typing import Any, Callable, Iterable, Optional
 
+from repro.analysis import locktrace
+
 QUEUED = "QUEUED"
 RUNNING = "RUNNING"
 DONE = "DONE"
@@ -112,7 +114,7 @@ class TaskScheduler:
                  on_finish: Optional[Callable[[Task], None]] = None):
         self.num_workers = max(1, int(num_workers))
         self.on_finish = on_finish
-        self._cv = threading.Condition()
+        self._cv = locktrace.make_condition("scheduler.cv")
         self._tasks: dict[int, Task] = {}
         self._ids = itertools.count(1)
         self._ready: collections.deque[int] = collections.deque()
@@ -122,7 +124,7 @@ class TaskScheduler:
         self._readers: dict[int, set[int]] = {}    # handle id -> readers since
         self._threads: list[threading.Thread] = []
         self._finished: collections.deque[Task] = collections.deque()
-        self._cb_lock = threading.Lock()
+        self._cb_lock = locktrace.make_lock("scheduler.delivery")
         self._shutdown = False
         self._paused = False
         self._running = 0
@@ -190,6 +192,18 @@ class TaskScheduler:
             task.dep_ids = tuple(sorted(deps))
             for d in deps:
                 self._tasks[d].dependents.append(task.id)
+            # A data dep on an already-terminal producer gates nothing,
+            # but this task still resolves its deferred inputs from that
+            # row when it runs: record the dependency anyway so
+            # release() keeps the producer's row until this task is
+            # terminal too. Without the edge, a concurrent result
+            # delivery (wait -> release) between this submit and our
+            # execution drops the row and resolution fails with
+            # "unknown task".
+            for tid in task.data_deps:
+                t = self._tasks.get(tid)
+                if t is not None and tid not in deps:
+                    t.dependents.append(task.id)
             if task.deps == 0:
                 self._ready.append(task.id)
             self._spawn_workers()

@@ -41,6 +41,7 @@ import jax
 import msgpack
 import numpy as np
 
+from repro.analysis import locktrace
 from repro.core import protocol, transfer, wire
 from repro.core.costmodel import WireLog
 from repro.core.engine import SYSTEM_SESSION, AlchemistEngine, \
@@ -84,7 +85,7 @@ class _Connection:
         self.sessions: set[int] = set()
         self.uploads: dict[int, _Upload] = {}
         self._upload_ids = itertools.count(1)
-        self._send_lock = threading.Lock()
+        self._send_lock = locktrace.make_lock("server.send")
         self.thread = threading.Thread(
             target=self._run, daemon=True,
             name=f"alchemist-conn-{next(self._ids)}")
@@ -170,19 +171,11 @@ class _Connection:
             pass
 
     # ---- dispatch -----------------------------------------------------
-    _ENDPOINTS = {
-        wire.FRAME_HANDSHAKE: "handshake",
-        wire.FRAME_COMMAND: "submit",
-        wire.FRAME_TASK_OP: "task_op",
-        wire.FRAME_DESCRIBE: "describe",
-        wire.FRAME_CONFIGURE: "configure",
-        wire.FRAME_FREE: "free",
-        wire.FRAME_ALIAS_LOOKUP: "alias_lookup",
-        wire.FRAME_UPLOAD_BEGIN: "upload",
-        wire.FRAME_UPLOAD_CHUNK: "upload",
-        wire.FRAME_UPLOAD_COMMIT: "upload",
-        wire.FRAME_FETCH: "fetch",
-    }
+    # generated from the wire-protocol frame registry: request frames
+    # dispatch to their registered endpoint, everything else (a client
+    # sending a reply-role frame) is refused below — one source of
+    # truth with wire.FRAME_TYPES and the client's expected-reply sets
+    _ENDPOINTS = wire.REQUEST_ENDPOINTS
 
     def _dispatch(self, frame_type: int, payload: bytes) -> None:
         endpoint = self._ENDPOINTS.get(frame_type)
@@ -449,7 +442,7 @@ class AlchemistServer:
         self._listener.bind((host, port))
         self.host, self.port = self._listener.getsockname()[:2]
         self._conns: set[_Connection] = set()
-        self._conns_lock = threading.Lock()
+        self._conns_lock = locktrace.make_lock("server.conns")
         self._accept_thread: Optional[threading.Thread] = None
 
     @property

@@ -43,12 +43,12 @@ from __future__ import annotations
 import dataclasses
 import socket
 import struct
-import threading
 from typing import Any, Callable, Optional
 
 import msgpack
 import numpy as np
 
+from repro.analysis import locktrace
 from repro.core import protocol
 from repro.core.costmodel import TransferRecord, WireLog
 
@@ -64,33 +64,87 @@ HEADER_BYTES = _HEADER.size
 # cap is checked before any payload allocation.
 MAX_FRAME_BYTES = 256 << 20
 
-# ---- frame types ------------------------------------------------------
-# control plane (payload = the matching protocol.py codec)
-FRAME_HANDSHAKE = 0x01
-FRAME_COMMAND = 0x02              # engine.submit
-FRAME_TASK_OP = 0x03
-FRAME_DESCRIBE = 0x04
-FRAME_CONFIGURE = 0x05
-FRAME_FREE = 0x06                 # msgpack {handle, session}
-FRAME_RESULT = 0x10               # reply: protocol.encode_result bytes
-FRAME_ERROR = 0x7F                # transport fault: msgpack {kind, error}
-# data plane (chunked transfers, §3.2)
-FRAME_ALIAS_LOOKUP = 0x20         # pre-stream dedup probe
-FRAME_UPLOAD_BEGIN = 0x21
-FRAME_UPLOAD_CHUNK = 0x22         # pipelined: no per-chunk ack
-FRAME_UPLOAD_COMMIT = 0x23
-FRAME_FETCH = 0x30
-FRAME_FETCH_META = 0x31
-FRAME_FETCH_CHUNK = 0x32
-FRAME_FETCH_END = 0x33            # carries the aggregate TransferRecord
+# ---- frame registry ---------------------------------------------------
+# The single source of truth for the frame table. FRAME_TYPES, the
+# server dispatch dict (server._Connection._ENDPOINTS) and the client's
+# expected-reply sets are all *generated* from this tuple — adding a
+# frame means adding one FrameSpec row (and its handler, which the
+# repro.analysis WIRE rules then demand exists), never editing three
+# hand-maintained literals.
+@dataclasses.dataclass(frozen=True)
+class FrameSpec:
+    """One row of the wire-protocol frame table.
 
-FRAME_TYPES = frozenset({
-    FRAME_HANDSHAKE, FRAME_COMMAND, FRAME_TASK_OP, FRAME_DESCRIBE,
-    FRAME_CONFIGURE, FRAME_FREE, FRAME_RESULT, FRAME_ERROR,
-    FRAME_ALIAS_LOOKUP, FRAME_UPLOAD_BEGIN, FRAME_UPLOAD_CHUNK,
-    FRAME_UPLOAD_COMMIT, FRAME_FETCH, FRAME_FETCH_META,
-    FRAME_FETCH_CHUNK, FRAME_FETCH_END,
-})
+    ``name`` yields the module constant ``FRAME_<name>``; ``role`` is
+    ``request`` (client -> server, dispatched to ``endpoint``),
+    ``reply`` (server -> client) or ``error`` (either direction);
+    ``replies`` names the frames a well-behaved server may answer a
+    request with (empty for pipelined frames that are never acked).
+    """
+    name: str
+    code: int
+    role: str
+    endpoint: str = ""
+    replies: tuple = ()
+
+
+FRAME_SPECS: tuple[FrameSpec, ...] = (
+    # control plane (payload = the matching protocol.py codec)
+    FrameSpec("HANDSHAKE", 0x01, "request", "handshake", ("RESULT",)),
+    FrameSpec("COMMAND", 0x02, "request", "submit", ("RESULT",)),
+    FrameSpec("TASK_OP", 0x03, "request", "task_op", ("RESULT",)),
+    FrameSpec("DESCRIBE", 0x04, "request", "describe", ("RESULT",)),
+    FrameSpec("CONFIGURE", 0x05, "request", "configure", ("RESULT",)),
+    FrameSpec("FREE", 0x06, "request", "free", ("RESULT",)),
+    FrameSpec("RESULT", 0x10, "reply"),
+    FrameSpec("ERROR", 0x7F, "error"),
+    # data plane (chunked transfers, §3.2)
+    FrameSpec("ALIAS_LOOKUP", 0x20, "request", "alias_lookup",
+              ("RESULT",)),
+    FrameSpec("UPLOAD_BEGIN", 0x21, "request", "upload", ("RESULT",)),
+    # pipelined: no per-chunk ack
+    FrameSpec("UPLOAD_CHUNK", 0x22, "request", "upload"),
+    FrameSpec("UPLOAD_COMMIT", 0x23, "request", "upload", ("RESULT",)),
+    FrameSpec("FETCH", 0x30, "request", "fetch",
+              ("RESULT", "FETCH_META", "FETCH_CHUNK", "FETCH_END")),
+    FrameSpec("FETCH_META", 0x31, "reply"),
+    FrameSpec("FETCH_CHUNK", 0x32, "reply"),
+    # FETCH_END carries the aggregate TransferRecord
+    FrameSpec("FETCH_END", 0x33, "reply"),
+)
+
+FRAMES_BY_NAME: dict[str, FrameSpec] = {s.name: s for s in FRAME_SPECS}
+FRAMES_BY_CODE: dict[int, FrameSpec] = {s.code: s for s in FRAME_SPECS}
+
+# readable aliases (values live only in FRAME_SPECS)
+FRAME_HANDSHAKE = FRAMES_BY_NAME["HANDSHAKE"].code
+FRAME_COMMAND = FRAMES_BY_NAME["COMMAND"].code
+FRAME_TASK_OP = FRAMES_BY_NAME["TASK_OP"].code
+FRAME_DESCRIBE = FRAMES_BY_NAME["DESCRIBE"].code
+FRAME_CONFIGURE = FRAMES_BY_NAME["CONFIGURE"].code
+FRAME_FREE = FRAMES_BY_NAME["FREE"].code
+FRAME_RESULT = FRAMES_BY_NAME["RESULT"].code
+FRAME_ERROR = FRAMES_BY_NAME["ERROR"].code
+FRAME_ALIAS_LOOKUP = FRAMES_BY_NAME["ALIAS_LOOKUP"].code
+FRAME_UPLOAD_BEGIN = FRAMES_BY_NAME["UPLOAD_BEGIN"].code
+FRAME_UPLOAD_CHUNK = FRAMES_BY_NAME["UPLOAD_CHUNK"].code
+FRAME_UPLOAD_COMMIT = FRAMES_BY_NAME["UPLOAD_COMMIT"].code
+FRAME_FETCH = FRAMES_BY_NAME["FETCH"].code
+FRAME_FETCH_META = FRAMES_BY_NAME["FETCH_META"].code
+FRAME_FETCH_CHUNK = FRAMES_BY_NAME["FETCH_CHUNK"].code
+FRAME_FETCH_END = FRAMES_BY_NAME["FETCH_END"].code
+
+FRAME_TYPES = frozenset(FRAMES_BY_CODE)
+
+#: frame code -> server dispatch endpoint, for every request frame —
+#: what server._Connection binds as its dispatch table
+REQUEST_ENDPOINTS: dict[int, str] = {
+    s.code: s.endpoint for s in FRAME_SPECS if s.role == "request"}
+
+#: request frame code -> frame codes a client may accept in reply
+EXPECTED_REPLIES: dict[int, frozenset] = {
+    s.code: frozenset(FRAMES_BY_NAME[r].code for r in s.replies)
+    for s in FRAME_SPECS if s.role == "request"}
 
 
 # ---- typed framing faults ---------------------------------------------
@@ -351,7 +405,10 @@ class SocketBridge:
         self._sock.settimeout(timeout)
         self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         self._rfile = self._sock.makefile("rb")
-        self._lock = threading.RLock()
+        # held across each request-response exchange (the protocol is
+        # strictly serial per connection) — a long hold by design, and
+        # visible as such in the REPRO_LOCK_TRACE report
+        self._lock = locktrace.make_rlock("wire.bridge")
         self._closed = False
         self.wire_log = WireLog()
 
@@ -382,7 +439,7 @@ class SocketBridge:
             self._check_open()
             self._send(endpoint, frame_type, payload)
             ftype, reply = self._recv(endpoint)
-        if ftype != FRAME_RESULT:
+        if ftype not in EXPECTED_REPLIES[frame_type]:
             raise WireError(
                 f"expected a RESULT frame from {endpoint}, got "
                 f"0x{ftype:02x}")
@@ -502,6 +559,10 @@ class SocketBridge:
             on_meta(msgpack.unpackb(reply))
             while True:
                 ftype, reply = self._recv("fetch")
+                if ftype not in EXPECTED_REPLIES[FRAME_FETCH]:
+                    raise WireError(
+                        f"unexpected frame 0x{ftype:02x} inside a fetch "
+                        "stream")
                 if ftype == FRAME_FETCH_CHUNK:
                     d = msgpack.unpackb(reply)
                     on_chunk(d["lo"], d["hi"], unpack_ndarray(d["array"]))
@@ -510,8 +571,8 @@ class SocketBridge:
                     return TransferRecord(**d["record"])
                 else:
                     raise WireError(
-                        f"unexpected frame 0x{ftype:02x} inside a fetch "
-                        "stream")
+                        f"mis-sequenced frame 0x{ftype:02x} inside a "
+                        "fetch stream")
 
     # ---- lifecycle ----------------------------------------------------
     def close(self) -> None:

@@ -1,0 +1,38 @@
+"""Deliberately-broken module exercised by tests/test_analysis.py.
+
+Every construct below violates exactly one repro.analysis source rule;
+the tests assert each rule fires *here* and stays quiet on the real
+tree. This module must never be imported by product code (and the
+pickle import is why it must never be imported at all by the tests —
+they parse it as source).
+"""
+import pickle                                          # PKL001
+import threading
+
+import jax
+import numpy as np
+
+
+def evil_loads(payload: bytes):
+    return pickle.loads(payload)                       # PKL001 (call)
+
+
+_lock = threading.Lock()                               # LCK001
+
+
+@jax.jit
+def impure_traced(x):
+    print("tracing", x)                                # TRC001 (I/O)
+    host = np.asarray(x)                               # TRC001 (host sync)
+    x.block_until_ready()                              # TRC001 (sync)
+    with _lock:                                        # TRC001 (locking)
+        return host + 1
+
+
+def _bad_kernel(x_ref, o_ref):
+    print("inside a pallas kernel")                    # TRC001 (I/O)
+    o_ref[...] = x_ref[...]
+
+
+def launch(pallas_call, x):
+    return pallas_call(_bad_kernel, out_shape=x)(x)

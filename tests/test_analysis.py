@@ -1,0 +1,478 @@
+"""The invariant checker's own conformance suite.
+
+Two halves, mirroring ``repro.analysis``:
+
+* every static rule family (CAT/WIRE/BRG/TRC/PKL/LCK) is proven with a
+  **fixture that violates exactly it** — fake catalogs/backends for the
+  registry rules, crafted frame tables for the wire rules, and
+  ``tests/fixtures/analysis_violations.py`` (parsed as source, never
+  imported) for the AST rules — and proven **quiet on the real tree**,
+  so the CI gate is neither toothless nor noisy;
+* the dynamic lock-order detector is unit-tested on private
+  :class:`LockTrace` instances (cycle, rank inversion, wait-under-lock)
+  and then run for real: a multi-thread multi-session stress over a
+  fully traced engine + TCP server, asserting the recorded acquisition
+  graph is acyclic and rank-consistent.
+"""
+import json
+import os
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.analysis import locktrace, run_all_rules
+from repro.analysis import findings as F
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.rules_catalog import check_catalog_parity
+from repro.analysis.rules_source import (
+    check_lock_discipline, check_no_pickle, check_trace_purity)
+from repro.analysis.rules_wire import (
+    check_bridge_parity, check_wire_exhaustiveness)
+from repro.core.backends.base import ExecutionBackend
+from repro.core.wire import FrameSpec
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "analysis_violations.py")
+
+
+def _by_rule(findings, rule):
+    return [f for f in findings if f.rule == rule]
+
+
+# =====================================================================
+# CAT — catalog parity, against a deliberately drifted fake registry
+# =====================================================================
+def _spec_fn_mul(engine, A, B):
+    raise NotImplementedError
+
+
+def _spec_fn_solo(engine, A):
+    raise NotImplementedError
+
+
+class _FakeA(ExecutionBackend):
+    name = "fake-a"
+
+    def to_native(self, array):
+        return array
+
+    def is_array(self, value):
+        return False
+
+
+class _FakeB(ExecutionBackend):
+    name = "fake-b"
+
+    def to_native(self, array):
+        return array
+
+    def is_array(self, value):
+        return False
+
+
+# CAT004: bucketable without a shape rule (and fusible=True for CAT003)
+@_FakeA.register("fakelib", "mul", fusible=True, bucketable=True)
+def _a_mul(A=None, B=None):
+    return {"C": A}
+
+
+# CAT005: spec declares output "X", the impl only ever returns "Y"
+@_FakeA.register("fakelib", "solo")
+def _a_solo(A=None):
+    return {"Y": A}
+
+
+# CAT002: registered under the cataloged library, never declared
+@_FakeA.register("fakelib", "orphan")
+def _a_orphan(A=None):
+    return {"Z": A}
+
+
+# CAT003: fusible drifts from _FakeA's registration of the same routine
+@_FakeB.register("fakelib", "mul", fusible=False)
+def _b_mul(A=None, B=None):
+    return {"C": A}
+# CAT001: _FakeB never registers fakelib.solo
+
+
+@pytest.fixture()
+def fake_catalog():
+    spec = types.SimpleNamespace
+    module = spec(
+        __file__=__file__,
+        ROUTINES={
+            "mul": spec(fn=_spec_fn_mul, outputs=("C",)),
+            "solo": spec(fn=_spec_fn_solo, outputs=("X",)),
+        })
+    return {"fakelib": module}, [_FakeA(), _FakeB()]
+
+
+def test_cat_rules_fire_on_drifted_registry(fake_catalog):
+    libraries, backends = fake_catalog
+    found = check_catalog_parity(libraries=libraries, backends=backends)
+
+    missing = _by_rule(found, "CAT001")
+    assert [f.symbol for f in missing] == ["fakelib.solo@fake-b"]
+
+    orphans = _by_rule(found, "CAT002")
+    assert [f.symbol for f in orphans] == ["fakelib.orphan@fake-a"]
+
+    drift = _by_rule(found, "CAT003")
+    assert [f.symbol for f in drift] == ["fakelib.mul"]
+    assert "fusible" in drift[0].message
+    assert "bucketable" in drift[0].message     # True on A, False on B
+
+    bucket = _by_rule(found, "CAT004")
+    assert [f.symbol for f in bucket] == ["fakelib.mul@fake-a"]
+
+    arity = _by_rule(found, "CAT005")
+    assert [f.symbol for f in arity] == ["fakelib.solo@fake-a"]
+    assert "X" in arity[0].message
+
+
+def test_cat_quiet_when_registry_agrees():
+    spec = types.SimpleNamespace
+    module = spec(__file__=__file__,
+                  ROUTINES={"mul": spec(fn=_spec_fn_mul,
+                                        outputs=("C",))})
+    # only _FakeB (no orphan, fusible=False everywhere): nothing drifts
+    assert check_catalog_parity(libraries={"fakelib": module},
+                                backends=[_FakeB()]) == []
+
+
+# =====================================================================
+# WIRE/BRG — frame-table exhaustiveness on crafted registries
+# =====================================================================
+def test_wire001_registry_integrity():
+    bad = (
+        FrameSpec("A", 0x01, "request", "handshake", ("RESULT",)),
+        FrameSpec("B", 0x01, "request", "submit", ("RESULT",)),
+        FrameSpec("C", 0x02, "request", "", ()),
+        FrameSpec("RESULT", 0x10, "reply"),
+        FrameSpec("D", 0x03, "request", "describe", ("GHOST",)),
+        FrameSpec("E", 0x04, "reply", endpoint="submit"),
+    )
+    syms = {f.symbol for f in
+            _by_rule(check_wire_exhaustiveness(frame_specs=bad),
+                     "WIRE001")}
+    assert "0x01" in syms          # duplicate code
+    assert "C" in syms             # request without an endpoint
+    assert "D->GHOST" in syms      # reply naming an unregistered frame
+    assert "E" in syms             # non-request declaring an endpoint
+
+
+def test_wire002_unhandled_request_frame():
+    specs = (
+        FrameSpec("BOGUS", 0x44, "request", "bogus_endpoint",
+                  ("RESULT",)),
+        FrameSpec("RESULT", 0x10, "reply"),
+    )
+    found = _by_rule(check_wire_exhaustiveness(frame_specs=specs),
+                     "WIRE002")
+    assert [f.symbol for f in found] == ["BOGUS"]
+    assert "bogus_endpoint" in found[0].message
+
+
+def test_wire003_frame_the_client_never_sends():
+    # endpoint resolves on the engine (WIRE002 quiet) but SocketBridge's
+    # source never references FRAME_GHOSTCALL
+    specs = (
+        FrameSpec("GHOSTCALL", 0x45, "request", "describe",
+                  ("RESULT",)),
+        FrameSpec("RESULT", 0x10, "reply"),
+    )
+    found = check_wire_exhaustiveness(frame_specs=specs)
+    assert [f.symbol for f in _by_rule(found, "WIRE002")] == []
+    assert [f.symbol for f in _by_rule(found, "WIRE003")] == \
+        ["GHOSTCALL"]
+
+
+def test_brg001_bridge_missing_consumer_surface():
+    class _NotABridge:            # no submit/handshake/fetch/...
+        def close(self):
+            pass
+
+    found = _by_rule(check_bridge_parity(bridge_cls=_NotABridge),
+                     "BRG001")
+    syms = {f.symbol for f in found}
+    assert "submit" in syms       # context.py calls .submit() on bridges
+    assert all("_NotABridge does not provide it" in f.message
+               for f in found)
+
+
+def test_wire_rules_quiet_on_real_registry():
+    assert check_wire_exhaustiveness() == []
+    assert check_bridge_parity() == []
+
+
+# =====================================================================
+# TRC/PKL/LCK — AST rules against the violating fixture module
+# =====================================================================
+def test_trc001_fires_on_every_impurity_in_fixture():
+    found = check_trace_purity(paths=[FIXTURE], include_fusible=False)
+    assert all(f.rule == "TRC001" for f in found)
+    by_fn = {}
+    for f in found:
+        by_fn.setdefault(f.symbol.split(":")[1], []).append(f.message)
+    # the jitted function: I/O, host materialization, sync, locking
+    impure = "\n".join(by_fn["impure_traced"])
+    assert "print()" in impure
+    assert "np.asarray()" in impure
+    assert ".block_until_ready()" in impure
+    assert "with _lock:" in impure
+    # the pallas kernel (found via pallas_call first-arg, no decorator)
+    assert len(by_fn["_bad_kernel"]) == 1
+    assert by_fn["_bad_kernel"][0].startswith("print()")
+    assert len(found) == 5
+
+
+def test_pkl001_fires_on_pickle_in_fixture():
+    found = check_no_pickle(paths=[FIXTURE])
+    assert [f.rule for f in found] == ["PKL001", "PKL001"]
+    syms = {f.symbol for f in found}
+    assert "analysis_violations.py:import-pickle" in syms
+    assert "analysis_violations.py:pickle.loads" in syms
+
+
+def test_lck001_fires_on_raw_lock_in_fixture():
+    found = check_lock_discipline(paths=[FIXTURE])
+    assert [f.symbol for f in found] == \
+        ["analysis_violations.py:threading.Lock"]
+
+
+def test_source_rules_quiet_on_real_tree():
+    assert check_trace_purity() == []
+    assert check_no_pickle() == []
+    assert check_lock_discipline() == []
+
+
+# =====================================================================
+# the gate: all rules + baseline mechanics + CLI exit codes
+# =====================================================================
+def test_run_all_rules_clean_on_real_tree():
+    assert run_all_rules() == []
+
+
+def test_fingerprints_are_line_independent():
+    a = F.Finding("CAT001", "/x/src/repro/core/a.py", 10, "s.r", "m")
+    b = F.Finding("CAT001", "/y/src/repro/core/a.py", 99, "s.r", "m2")
+    assert a.fingerprint() == b.fingerprint() == \
+        "CAT001:src/repro/core/a.py:s.r"
+
+
+def test_baseline_suppresses_and_ratchets(tmp_path):
+    live = F.Finding("CAT001", "src/repro/core/a.py", 1, "lib.rt", "m")
+    path = str(tmp_path / "baseline.json")
+    F.write_baseline([live], path, reason="known drift")
+    baseline = F.load_baseline(path)
+    assert baseline == {live.fingerprint(): "known drift"}
+
+    gate = F.apply_baseline([live], baseline)
+    assert gate.ok and [f.fingerprint() for f in gate.suppressed] == \
+        [live.fingerprint()] and gate.stale == []
+
+    # the finding stops firing -> its suppression turns stale (ratchet)
+    gate = F.apply_baseline([], baseline)
+    assert gate.ok and gate.stale == [live.fingerprint()]
+
+    # a new, unbaselined finding fails the gate
+    fresh = F.Finding("CAT002", "src/repro/core/b.py", 2, "o.r", "m")
+    assert not F.apply_baseline([fresh], baseline).ok
+
+
+def test_cli_static_gate_is_clean(capsys):
+    assert analysis_main([]) == 0
+    assert "repro.analysis: clean" in capsys.readouterr().out
+
+
+def test_cli_json_mode(capsys):
+    assert analysis_main(["--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["ok"] is True and payload["new"] == []
+
+
+def test_cli_lock_report_gate(tmp_path, capsys):
+    clean = tmp_path / "clean.json"
+    clean.write_text(json.dumps(
+        {"locks": ["a", "b"], "edges": [
+            {"from": "a", "to": "b", "count": 3, "site": "x.py:1"}],
+         "cycles": [], "rank_inversions": []}))
+    assert analysis_main(["--check-lock-report", str(clean)]) == 0
+    assert "clean" in capsys.readouterr().out
+
+    dirty = tmp_path / "dirty.json"
+    dirty.write_text(json.dumps(
+        {"locks": ["a", "b"], "edges": [],
+         "cycles": [["a", "b", "a"]],
+         "rank_inversions": [{"held": "b", "acquired": "a", "count": 1,
+                              "site": "x.py:2"}]}))
+    assert analysis_main(["--check-lock-report", str(dirty)]) == 1
+    assert "VIOLATIONS" in capsys.readouterr().out
+
+    assert analysis_main(["--check-lock-report",
+                          str(tmp_path / "missing.json")]) == 2
+
+
+# =====================================================================
+# locktrace — the dynamic detector, unit level
+# =====================================================================
+def test_locktrace_detects_ab_ba_cycle():
+    tr = locktrace.LockTrace()
+    a = locktrace.TracedLock("t.A", trace=tr)
+    b = locktrace.TracedLock("t.B", trace=tr)
+
+    with a:
+        with b:
+            pass
+    with b:
+        with a:                   # the classic AB/BA inversion
+            pass
+
+    assert tr.cycles() == [["t.A", "t.B", "t.A"]]
+    with pytest.raises(AssertionError, match="lock-order violations"):
+        tr.assert_clean()
+
+
+def test_locktrace_flags_rank_inversion_before_any_cycle():
+    tr = locktrace.LockTrace()
+    hi = locktrace.TracedLock("t.hi", rank=20, trace=tr)
+    lo = locktrace.TracedLock("t.lo", rank=10, trace=tr)
+    with hi:
+        with lo:                  # lower rank acquired under higher
+            pass
+    p = tr.problems()
+    assert p["cycles"] == []      # one-sided: no cycle yet
+    assert [(i["held"], i["acquired"]) for i in p["rank_inversions"]] \
+        == [("t.hi", "t.lo")]
+
+
+def test_locktrace_records_wait_under_lock():
+    tr = locktrace.LockTrace()
+    outer = locktrace.TracedLock("t.outer", trace=tr)
+    cv = locktrace.TracedCondition("t.cv", trace=tr)
+    with outer:
+        with cv:
+            cv.wait(timeout=0.01)   # sleeps while still holding t.outer
+    report = tr.report()
+    assert [(w["held"], w["wait_on"])
+            for w in report["waits_under_lock"]] == [("t.outer", "t.cv")]
+    assert not report["cycles"] and not report["rank_inversions"]
+
+
+def test_locktrace_ignores_rlock_reentry_and_clean_nesting():
+    tr = locktrace.LockTrace()
+    r = locktrace.TracedLock("t.R", inner=threading.RLock(), trace=tr)
+    inner = locktrace.TracedLock("t.inner", trace=tr)
+    with r:
+        with r:                   # reentry: no self-edge
+            with inner:
+                pass
+    assert ("t.R", "t.R") not in tr.edges
+    assert ("t.R", "t.inner") in tr.edges
+    tr.assert_clean()
+
+
+def test_factories_are_plain_primitives_when_disabled(monkeypatch):
+    monkeypatch.delenv(locktrace.ENV_FLAG, raising=False)
+    assert not locktrace.enabled()
+    lk = locktrace.make_lock("off.lock")
+    assert type(lk) is type(threading.Lock())      # zero overhead
+    assert isinstance(locktrace.make_condition("off.cv"),
+                      threading.Condition)
+
+
+def test_factories_are_traced_when_enabled(monkeypatch):
+    monkeypatch.setenv(locktrace.ENV_FLAG, "1")
+    lk = locktrace.make_lock("on.lock")
+    cv = locktrace.make_condition("on.cv")
+    assert isinstance(lk, locktrace.TracedLock)
+    assert isinstance(cv, locktrace.TracedCondition)
+    assert lk.rank is None        # unknown names are rank-exempt
+    assert locktrace.make_rlock("engine.state").rank == \
+        locktrace.LOCK_RANKS["engine.state"]
+
+
+def test_documented_rank_table_names_every_core_lock():
+    """Every dotted name core constructs a lock under must carry a rank
+    (else the inversion check silently skips it)."""
+    import re
+    src_root = os.path.join(os.path.dirname(__file__), "..", "src",
+                            "repro", "core")
+    used = set()
+    for dirpath, _dirs, files in os.walk(src_root):
+        for fname in files:
+            if not fname.endswith(".py"):
+                continue
+            with open(os.path.join(dirpath, fname)) as f:
+                used.update(re.findall(
+                    r"locktrace\.make_(?:r?lock|condition)\(\s*"
+                    r"['\"]([\w.]+)['\"]", f.read()))
+    assert used, "core stopped using the locktrace factories?"
+    assert used <= set(locktrace.LOCK_RANKS), \
+        f"locks missing from LOCK_RANKS: {used - set(locktrace.LOCK_RANKS)}"
+
+
+# =====================================================================
+# the stress run: a fully traced engine + TCP server under real load
+# =====================================================================
+def test_stress_traced_engine_lock_graph_is_acyclic(monkeypatch):
+    """Multi-thread multi-session chains over an engine whose every lock
+    is instrumented, plus a socket client exercising the server and
+    bridge locks — then the recorded acquisition graph must be acyclic
+    and consistent with the documented rank order."""
+    monkeypatch.setenv(locktrace.ENV_FLAG, "1")
+    locktrace.TRACE.reset()
+
+    # construct AFTER the flag is set: factories read it at build time
+    from repro.core import AlchemistContext, AlchemistEngine
+    from repro.core.engine import make_engine_mesh
+    from repro.core.libraries import elemental
+    from repro.core.server import AlchemistServer
+
+    engine = AlchemistEngine(make_engine_mesh(1), scheduler_workers=4)
+    engine.load_library("elemental", elemental)
+    srv = AlchemistServer(engine=engine).start()
+    errors = []
+
+    def chains(ac, seed):
+        try:
+            for c in range(2):
+                f1 = ac.call_async("elemental", "random_matrix",
+                                   rows=24, cols=6, seed=seed + c)
+                f2 = ac.call_async("elemental", "gram", A=f1["A"])
+                f3 = ac.call_async("elemental", "multiply", A=f1["A"],
+                                   B=f2["G"])
+                assert f3.result()["C"].shape == (24, 6)
+        except Exception as e:                  # pragma: no cover
+            errors.append(e)
+
+    try:
+        ctxs = [AlchemistContext(engine=engine, client_name=f"t{i}")
+                for i in range(3)]
+        ctxs.append(AlchemistContext(address=srv.address,
+                                     client_name="socket"))
+        threads = [threading.Thread(target=chains, args=(ac, 31 * i))
+                   for i, ac in enumerate(ctxs)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for ac in ctxs:
+            ac.stop()
+    finally:
+        srv.stop()
+
+    assert not errors
+    # tracing saw the real locks on both the engine and transport paths
+    assert {"engine.state", "scheduler.cv"} <= locktrace.TRACE.names
+    assert "wire.bridge" in locktrace.TRACE.names
+    assert locktrace.TRACE.edges      # nesting actually happened
+    # ... and the graph it recorded is deadlock-free and rank-ordered
+    locktrace.TRACE.assert_clean()
+    report = locktrace.TRACE.report()
+    assert report["cycles"] == [] and report["rank_inversions"] == []
+
+    locktrace.TRACE.reset()           # leave nothing for atexit to dump

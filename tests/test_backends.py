@@ -424,3 +424,22 @@ def test_legacy_ali_library_runs_on_any_backend():
         finally:
             ac.stop()
     engine.shutdown()
+
+
+def test_backend_registries_have_identical_catalog_metadata():
+    """The parity invariant CAT001-004 gates in CI, asserted directly:
+    both bundled backends serve the same (library, routine) set with
+    matching fusible/bucketable flags and shape-rule coverage — the
+    flags describe the routine, so which backend executes must never
+    change what fuses or what warmup can bucket."""
+    jax_be = backends.create_backend("jax")
+    ref_be = backends.create_backend("reference")
+    assert jax_be.routines() == ref_be.routines()
+    for lib, rt in jax_be.routines():
+        a = jax_be.routine_impl(lib, rt)
+        b = ref_be.routine_impl(lib, rt)
+        assert a.fusible == b.fusible, (lib, rt)
+        assert a.bucketable == b.bucketable, (lib, rt)
+        assert (a.out_shapes is None) == (b.out_shapes is None), (lib, rt)
+        if a.bucketable:
+            assert a.out_shapes is not None, (lib, rt)

@@ -328,6 +328,36 @@ def test_blocking_calls_do_not_accumulate_task_rows(engine):
     assert engine.task_log.session_summary(ac.session)["tasks"] == 5
 
 
+def test_release_keeps_producer_row_for_terminal_data_dep():
+    """Regression: a consumer whose data dep was already DONE at submit
+    time still pins the producer's row until the consumer is terminal —
+    otherwise a concurrent result delivery (wait -> release) between
+    submit and execution drops the row and deferred resolution fails
+    with "unknown task". Found by the traced-engine stress run
+    (tests/test_analysis.py)."""
+    sched = TaskScheduler(num_workers=1)
+    gate = threading.Event()
+    producer = sched.submit(lambda t: {"A": 7}, session=1)
+    assert sched.wait(producer.id, timeout=10).state == DONE
+
+    # occupy the single worker so the consumer stays QUEUED
+    blocker = sched.submit(lambda t: gate.wait(10), session=1)
+    consumer = sched.submit(
+        lambda t: sched.task(producer.id).result["A"],
+        session=1, data_deps=(producer.id,))
+
+    # the delivery-time release must refuse while the consumer is live
+    assert sched.release(producer.id) is False
+    assert sched.task(producer.id).result == {"A": 7}
+
+    gate.set()
+    done = sched.wait(consumer.id, timeout=10)
+    assert done.state == DONE and done.result == 7
+    sched.wait(blocker.id, timeout=10)
+    # ... and succeed once nothing depends on the row any more
+    assert sched.release(producer.id) is True
+
+
 def test_cross_session_deferred_is_refused_at_submit(engine):
     """Deferred handles are session-scoped: chaining on another tenant's
     task is rejected before a task (and a dependency edge onto the other
