@@ -38,6 +38,7 @@ algebra library's internal threading, is what exploits the host's cores.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import threading
@@ -52,10 +53,11 @@ if "jax" not in sys.modules:          # too late to take effect otherwise
 import numpy as np
 
 from benchmarks.common import header, row
-from repro.core import AlchemistContext, AlchemistEngine
+from repro.core import AlchemistBusyError, AlchemistContext, \
+    AlchemistEngine
 from repro.core.costmodel import percentile
 from repro.core.engine import make_engine_mesh
-from repro.core.libraries import elemental
+from repro.core.libraries import elemental, skylark
 from repro.core.server import AlchemistServer
 
 HEAVY_SHAPE = (2048, 512)             # the paper's offloaded regime
@@ -218,6 +220,182 @@ def run(clients_sweep, duration_s: float, k: int, workers: int,
                 f"clients={n} measured bytes on the wire")
 
 
+# =====================================================================
+# QoS fairness mode (--qos): fair share + admission vs unprotected FIFO
+# =====================================================================
+QOS_BURST = 3                         # async SVDs the heavy tenant stacks
+
+
+def _light_cg_loop(ac, mats, deadline, latencies):
+    x, y = mats
+    while time.perf_counter() < deadline:
+        t0 = time.perf_counter()
+        ac.call("skylark", "cg_solve", X=x, Y=y, lam=1e-4, max_iters=8)
+        latencies.append(time.perf_counter() - t0)
+
+
+def _heavy_burst_loop(ac, al, k, deadline, latencies, busy):
+    """The anti-social tenant: stack QOS_BURST async SVDs at a time.
+    Admission denials (QoS on, after the client's own backoff gives up)
+    are counted and honored — the cooperative half of backpressure."""
+    while time.perf_counter() < deadline:
+        t0 = time.perf_counter()
+        futs = []
+        for _ in range(QOS_BURST):
+            try:
+                futs.append(ac.call_async(
+                    "elemental", "truncated_svd", A=al, k=k, oversample=8))
+            except AlchemistBusyError as e:
+                busy[0] += 1
+                time.sleep(min(max(e.retry_after_s, 0.01), 0.2))
+        for f in futs:
+            f.result()
+        if futs:
+            latencies.append((time.perf_counter() - t0) / len(futs))
+
+
+def _run_qos_config(num_light: int, duration_s: float, k: int,
+                    workers: int, mode: str,
+                    bridge: str = "inmemory") -> dict:
+    """One time-boxed tenant mix. ``mode``:
+
+    * ``"solo"`` — the light CG tenants alone: the fairness baseline;
+    * ``"off"``  — plus the heavy SVD tenant, QoS disabled (plain FIFO:
+      the burst parks in front of every light call);
+    * ``"on"``   — same mix, ``qos=True``: the heavy tenant is capped at
+      one in-flight task (admission quota), weighted 1 against the light
+      tenants' 4, and its SVD yields at iteration boundaries.
+    """
+    qos_on = mode == "on"
+    engine = AlchemistEngine(make_engine_mesh(1),
+                             scheduler_workers=workers, cache_entries=0,
+                             qos=qos_on)
+    engine.load_library("elemental", elemental)
+    engine.load_library("skylark", skylark)
+    server = (AlchemistServer(engine=engine).start()
+              if bridge == "socket" else None)
+
+    def _ctx(name: str, **kw) -> AlchemistContext:
+        if server is not None:
+            return AlchemistContext(address=server.address,
+                                    client_name=name, **kw)
+        return AlchemistContext(engine=engine, client_name=name, **kw)
+
+    rng = np.random.RandomState(0)
+    light = []
+    for i in range(num_light):
+        ac = _ctx(f"light-{i}")
+        if qos_on:
+            ac.configure(weight=4.0)
+        x = ac.send_matrix(rng.randn(*LIGHT_SHAPE).astype(np.float32))
+        y = ac.send_matrix(rng.randn(
+            LIGHT_SHAPE[0], 1).astype(np.float32))
+        light.append((ac, (x, y)))
+
+    heavy_ac = None
+    heavy_lat: list[float] = []
+    busy = [0]
+    threads = []
+    deadline = time.perf_counter() + duration_s
+    if mode != "solo":
+        heavy_ac = _ctx("heavy", busy_retries=1)
+        if qos_on:
+            heavy_ac.configure(weight=1.0,
+                               quotas={"max_queue_depth": 1})
+        heavy_al = heavy_ac.send_matrix(
+            rng.randn(*HEAVY_SHAPE).astype(np.float32))
+        threads.append(threading.Thread(
+            target=_heavy_burst_loop,
+            args=(heavy_ac, heavy_al, k, deadline, heavy_lat, busy)))
+
+    light_lats: list[list[float]] = [[] for _ in light]
+    threads += [threading.Thread(
+        target=_light_cg_loop, args=(ac, mats, deadline, lat))
+        for (ac, mats), lat in zip(light, light_lats)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    all_light = [x for sub in light_lats for x in sub]
+    qstats = engine.qos_stats()
+    out = {
+        "mode": mode,
+        "light_ops": len(all_light),
+        "heavy_ops": len(heavy_lat) * QOS_BURST,
+        "light_p50_s": percentile(all_light, 50),
+        "light_p99_s": percentile(all_light, 99),
+        "client_busy_giveups": busy[0],
+        "rejected": qstats["rejected"],
+        "throttled": qstats["throttled"],
+        "preempted": qstats["preempted"],
+    }
+    for ac, _ in light:
+        ac.stop()
+    if heavy_ac is not None:
+        heavy_ac.stop()
+    if server is not None:
+        server.stop()
+    engine.shutdown()
+    return out
+
+
+def run_qos(duration_s: float, k: int, workers: int, num_light: int = 3,
+            smoke: bool = False, bridge: str = "inmemory",
+            json_path: str = None) -> dict:
+    """Light-tenant p99 with and without QoS under a saturating heavy
+    SVD tenant, against the solo (unshared-engine) baseline. With
+    ``smoke`` the fairness claim is asserted: fair share + admission
+    must hold the light p99 within 2x of solo."""
+    header("multi-tenant QoS: light-tenant latency under a heavy SVD")
+    print(f"mix: {num_light} light CG tenants "
+          f"({LIGHT_SHAPE[0]}x{LIGHT_SHAPE[1]}, 8 iters) vs 1 heavy "
+          f"tenant bursting {QOS_BURST} async truncated_svd k={k} on "
+          f"{HEAVY_SHAPE[0]}x{HEAVY_SHAPE[1]}; {duration_s:.0f}s "
+          f"time-box; {workers} workers; bridge = {bridge}")
+
+    # warm the jit caches so p99 measures dispatch, not compiles
+    _run_qos_config(num_light, min(duration_s, 2.0), k, workers,
+                    mode="off", bridge=bridge)
+
+    results = {m: _run_qos_config(num_light, duration_s, k, workers,
+                                  mode=m, bridge=bridge)
+               for m in ("solo", "off", "on")}
+    print("mode,light_ops,heavy_ops,light_p50_ms,light_p99_ms,"
+          "rejected,preempted,client_busy_giveups")
+    for m, r in results.items():
+        print(f"{m},{r['light_ops']},{r['heavy_ops']},"
+              f"{r['light_p50_s'] * 1e3:.1f},"
+              f"{r['light_p99_s'] * 1e3:.1f},"
+              f"{r['rejected']},{r['preempted']},"
+              f"{r['client_busy_giveups']}")
+    solo99 = results["solo"]["light_p99_s"]
+    on99 = results["on"]["light_p99_s"]
+    off99 = results["off"]["light_p99_s"]
+    row("qos/light_p99_ratio_on", on99 / max(solo99, 1e-9),
+        "light p99 with QoS on / solo baseline (claim: <= 2x)")
+    row("qos/light_p99_ratio_off", off99 / max(solo99, 1e-9),
+        "light p99 unprotected / solo baseline")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
+    if smoke:
+        # the fairness claim, CI-enforced (small absolute floor absorbs
+        # single-digit-ms timer noise on loaded runners)
+        bound = max(2.0 * solo99, 0.05)
+        assert on99 <= bound, (
+            f"light-tenant p99 {on99 * 1e3:.1f}ms with QoS on exceeds "
+            f"2x the solo baseline ({solo99 * 1e3:.1f}ms)")
+        assert results["on"]["rejected"] > 0, (
+            "the heavy tenant's burst was never admission-denied — the "
+            "quota did not engage")
+        print(f"smoke OK: qos-on light p99 {on99 * 1e3:.1f}ms <= bound "
+              f"{bound * 1e3:.1f}ms (solo {solo99 * 1e3:.1f}ms, "
+              f"unprotected {off99 * 1e3:.1f}ms)")
+    return results
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true",
@@ -234,8 +412,19 @@ def main() -> None:
                    help="transport between tenants and the engine: "
                         "in-process calls, or real TCP through "
                         "core/server.py")
+    p.add_argument("--qos", action="store_true",
+                   help="fairness mode: light-tenant p99 with/without "
+                        "multi-tenant QoS under a saturating heavy SVD "
+                        "(with --smoke, asserts the <=2x-of-solo claim)")
+    p.add_argument("--json", default=None,
+                   help="with --qos: also write results to this path")
     args = p.parse_args()
-    if args.smoke:
+    if args.qos:
+        run_qos(duration_s=2.0 if args.smoke else args.duration,
+                k=args.k, workers=2 if args.smoke else args.workers,
+                smoke=args.smoke, bridge=args.bridge,
+                json_path=args.json)
+    elif args.smoke:
         run([1, 2, 4], duration_s=2.0, k=8, workers=2, reps=3,
             bridge=args.bridge)
     else:

@@ -46,6 +46,10 @@ ALL = {
     # machine-readable output tracked across PRs
     "compile_warmup": lambda: compile_warmup.run(
         json_path="BENCH_compile_warmup.json"),
+    # multi-tenant QoS: light-tenant p99 vs solo baseline, asserted
+    "qos_fairness": lambda: multiclient_throughput.run_qos(
+        duration_s=2.0, k=8, workers=2, smoke=True,
+        json_path="BENCH_qos_fairness.json"),
 }
 
 

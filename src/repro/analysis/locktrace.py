@@ -71,6 +71,9 @@ LOCK_RANKS: dict[str, int] = {
     # the engine state lock may call into the scheduler (hazard probes
     # under _cache_fast_path) — never the reverse
     "engine.state": 10,
+    # QoS admission sits between the engine and the scheduler: checks
+    # run from submit/upload paths and may probe scheduler queue depth
+    "qos.admission": 12,
     "scheduler.cv": 20,
     # backend program caches sit below the scheduler (compiled under a
     # worker, outside engine/scheduler locks)
@@ -82,6 +85,7 @@ LOCK_RANKS: dict[str, int] = {
     "costmodel.task": 40,
     "costmodel.compile": 40,
     "costmodel.cache": 40,
+    "costmodel.qos": 40,
 }
 
 

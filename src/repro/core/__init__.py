@@ -4,9 +4,10 @@
 # the engine's hazard-aware task scheduler.
 from repro.core.context import AlchemistContext
 from repro.core.engine import AlchemistEngine
-from repro.core.expr import AlchemistError, AlFuture, AlMatrix, \
-    LibraryProxy
+from repro.core.expr import AlchemistBusyError, AlchemistError, AlFuture, \
+    AlMatrix, LibraryProxy
 from repro.core.handles import MatrixHandle
 
-__all__ = ["AlchemistContext", "AlchemistError", "AlFuture", "AlMatrix",
-           "AlchemistEngine", "LibraryProxy", "MatrixHandle"]
+__all__ = ["AlchemistBusyError", "AlchemistContext", "AlchemistError",
+           "AlFuture", "AlMatrix", "AlchemistEngine", "LibraryProxy",
+           "MatrixHandle"]

@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import threading
 from typing import Any, Callable, Optional
 
 # The engine-side distributed layouts (the Elemental DistMatrix
@@ -75,6 +76,39 @@ ALI = "ali"              # legacy ALI callable: fn(engine_view, **kwargs)
 class BackendError(RuntimeError):
     """A backend cannot serve a request (unknown backend name, no
     implementation registered for a routine it was asked to compile)."""
+
+
+# ---------------------------------------------------------------------------
+# cooperative preemption hook (core/qos)
+#
+# A long iterative routine (truncated SVD's subspace iterations, CG's
+# solve loop) would otherwise hold its scheduler worker for its whole
+# runtime, starving lighter tenants no matter how the ready queue is
+# ordered. The engine installs a per-task hook on the worker thread
+# (thread-local: concurrent workers each see their own task's hook) and
+# implementations call :func:`yield_check` at iteration boundaries —
+# when the fair-share queue says another tenant is far behind, the hook
+# briefly yields the host. With QoS off no hook is installed and the
+# call is a no-op attribute read.
+# ---------------------------------------------------------------------------
+_yield_hook = threading.local()
+
+
+def set_yield_check(fn: Optional[Callable[[], None]]) -> None:
+    """Install (or clear, with ``None``) the current worker thread's
+    iteration-boundary preemption hook. The engine pairs every install
+    with a ``finally`` clear, so a hook never outlives its task."""
+    _yield_hook.fn = fn
+
+
+def yield_check() -> None:
+    """Give the scheduler a chance to favor a starved tenant; called by
+    iterative implementations between iterations and by plan
+    interpreters between steps. No-op unless the engine installed a
+    hook for the running task."""
+    fn = getattr(_yield_hook, "fn", None)
+    if fn is not None:
+        fn()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -327,6 +361,7 @@ class ExecutionBackend(abc.ABC):
         def run(inputs: dict) -> list[dict]:
             outs: list[dict] = []
             for step in plan.steps:
+                yield_check()
                 outs.append(step.impl.fn(
                     **resolve_step_args(step, outs, inputs)))
             return outs

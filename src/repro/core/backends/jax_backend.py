@@ -271,6 +271,9 @@ def _truncated_svd(A, k: int, oversample: int = 32, max_iters: int = 0,
                                       x.dtype), np.float64)
 
     def matvec(q):
+        # each Lanczos iteration re-enters here: the natural QoS
+        # preemption boundary for the reverse-communication driver
+        base.yield_check()
         return np.asarray(_gram_matvec(x, jnp.asarray(q, x.dtype)),
                           np.float64)
 
@@ -367,6 +370,7 @@ def _cg_solve(X, Y, lam: float = 1e-5, rf_dim: int = 0,
     history = [rel]
     state = (w, r, p, rs)
     while iters < max_iters and rel > tol:
+        base.yield_check()          # QoS iteration boundary
         state = _step(x, lam_n, state)
         iters += 1
         rel = float(jnp.max(jnp.sqrt(state[3])
@@ -398,6 +402,7 @@ def _nmf(A, k: int, max_iters: int = 100, seed: int = 0, eps: float = 1e-9):
         return w, h
 
     for _ in range(max_iters):
+        base.yield_check()          # QoS iteration boundary
         w, h = update(w, h)
     resid = float(jnp.linalg.norm(x - w @ h) / jnp.linalg.norm(x))
     return {"W": w, "H": h, "relative_residual": resid,

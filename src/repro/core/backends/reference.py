@@ -121,6 +121,10 @@ def _lanczos_gram(matvec, d: int, k: int, m: int, q0: np.ndarray):
     b_prev = 0.0
     matvecs = 0
     for j in range(m):
+        # iteration boundary: a lighter tenant far behind on fair share
+        # may briefly take the host here (core/qos cooperative
+        # preemption; no-op unless the engine installed a hook)
+        base.yield_check()
         Q[:, j] = q
         w = matvec(q)
         matvecs += 1
@@ -230,6 +234,7 @@ def _cg_solve(X, Y, lam: float = 1e-5, rf_dim: int = 0,
     rel = float(np.max(np.sqrt(rs) / np.maximum(b_norm, 1e-30)))
     history = [rel]
     while iters < max_iters and rel > tol:
+        base.yield_check()          # QoS iteration boundary
         ap = x.T @ (x @ p) + lam_n * p
         alpha = rs / np.sum(p * ap, axis=0)
         w = w + alpha * p
@@ -259,6 +264,7 @@ def _nmf(A, k: int, max_iters: int = 100, seed: int = 0, eps: float = 1e-9):
     w = (scale * rng.uniform(0.1, 1.0, (n, k))).astype(x.dtype)
     h = (scale * rng.uniform(0.1, 1.0, (k, d))).astype(x.dtype)
     for _ in range(max_iters):
+        base.yield_check()          # QoS iteration boundary
         h = h * (w.T @ x) / (w.T @ (w @ h) + eps)
         w = w * (x @ h.T) / (w @ (h @ h.T) + eps)
     resid = float(np.linalg.norm(x - w @ h) / np.linalg.norm(x))

@@ -49,6 +49,11 @@ import os
 import tempfile
 from typing import Any, Iterable, Optional
 
+try:                                    # posix: advisory file locking for
+    import fcntl                        # cross-process index merges
+except ImportError:                     # pragma: no cover - non-posix
+    fcntl = None
+
 from repro.analysis import locktrace
 
 from repro.core.backends import base as backend_base
@@ -280,42 +285,83 @@ class ExecutableIndex:
     and tenant traffic then finds every previously-served program
     already compiled.
 
-    Writes are atomic (tmp + rename) and lock-protected; concurrent
-    engines sharing a dir last-write-win on the file but never corrupt
-    it, and re-recording a known key is a no-op.
+    Writes are atomic (tmp + rename), thread-lock-protected in process,
+    and **merge-on-write** across processes: each save takes an exclusive
+    ``flock`` on a sidecar lockfile, reloads whatever is on disk, unions
+    it with the in-memory records, and writes the union — so two engines
+    sharing a cache dir each keep the other's recordings instead of
+    last-write-winning the whole file. Re-recording a known key is a
+    no-op.
     """
 
     FILENAME = "executables.json"
+    LOCKNAME = "executables.json.lock"
 
     def __init__(self, cache_dir: str):
         self.path = os.path.join(cache_dir, self.FILENAME)
+        self.lock_path = os.path.join(cache_dir, self.LOCKNAME)
         self._lock = locktrace.make_lock("compilecache.index")
         self._records: dict[str, dict] = {}
         self._load()
 
-    def _load(self) -> None:
+    def _read_disk(self) -> dict:
         try:
             with open(self.path, "rb") as f:
                 data = json.load(f)
             if isinstance(data, dict):
-                self._records = {k: v for k, v in data.items()
-                                 if isinstance(v, dict)}
+                return {k: v for k, v in data.items()
+                        if isinstance(v, dict)}
         except (OSError, ValueError):
-            self._records = {}
+            pass
+        return {}
+
+    def _load(self) -> None:
+        self._records = self._read_disk()
+
+    def _flock(self):
+        """Exclusive cross-process lock on the sidecar file, or None when
+        the platform has no flock (then writes fall back to plain atomic
+        replace — still uncorrupted, merely last-write-wins)."""
+        if fcntl is None:               # pragma: no cover - non-posix
+            return None
+        os.makedirs(os.path.dirname(self.lock_path) or ".", exist_ok=True)
+        fd = os.open(self.lock_path, os.O_CREAT | os.O_RDWR, 0o644)
+        try:
+            fcntl.flock(fd, fcntl.LOCK_EX)
+        except OSError:                 # pragma: no cover - exotic fs
+            os.close(fd)
+            return None
+        return fd
 
     def _save_locked(self) -> None:
+        # merge-on-write: under the cross-process flock, fold the on-disk
+        # records (another engine may have grown them since our last
+        # load) into ours, then atomically replace with the union. Our
+        # in-memory copy wins ties — keys are content-addressed, so a tie
+        # is the same plan anyway.
         os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path) or ".",
-                                   prefix=".executables.")
+        lock_fd = self._flock()
         try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(self._records, f, indent=0, sort_keys=True)
-            os.replace(tmp, self.path)
-        except OSError:
+            for key, rec in self._read_disk().items():
+                self._records.setdefault(key, rec)
+            fd, tmp = tempfile.mkstemp(
+                dir=os.path.dirname(self.path) or ".",
+                prefix=".executables.")
             try:
-                os.unlink(tmp)
+                with os.fdopen(fd, "w") as f:
+                    json.dump(self._records, f, indent=0, sort_keys=True)
+                os.replace(tmp, self.path)
             except OSError:
-                pass
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+        finally:
+            if lock_fd is not None:
+                try:
+                    fcntl.flock(lock_fd, fcntl.LOCK_UN)
+                finally:
+                    os.close(lock_fd)
 
     def record(self, backend: str, plan: backend_base.ExecutionPlan,
                compile_s: float = 0.0) -> bool:

@@ -44,6 +44,7 @@ surface engine-side as before). Prefer the façade API in new code.
 """
 from __future__ import annotations
 
+import time
 import types
 import weakref
 from typing import Any, Optional
@@ -51,14 +52,21 @@ from typing import Any, Optional
 from repro.core import protocol, transfer, wire
 from repro.core.engine import ENGINE_LIBRARY, AlchemistEngine, \
     make_engine_mesh
-from repro.core.expr import AlchemistError, AlFuture, AlMatrix, \
-    LibraryProxy
+from repro.core.expr import AlchemistBusyError, AlchemistError, AlFuture, \
+    AlMatrix, LibraryProxy
 from repro.core.handles import MatrixHandle
 from repro.core.libraries import spec as specs
 from repro.frontend.rowmatrix import RowMatrix
 
-__all__ = ["AlchemistContext", "AlchemistError", "AlFuture", "AlMatrix",
-           "LibraryProxy"]
+__all__ = ["AlchemistBusyError", "AlchemistContext", "AlchemistError",
+           "AlFuture", "AlMatrix", "LibraryProxy"]
+
+# client half of the QoS backpressure loop (`engine admission control ->
+# AlchemistBusyError + retry_after_s -> this backoff`): first retry delay
+# when the engine sent no hint, and the hard cap on any single sleep so a
+# pessimistic engine hint cannot stall a client for seconds per attempt
+_BUSY_BACKOFF_S = 0.05
+_BUSY_BACKOFF_CAP_S = 2.0
 
 
 class AlchemistContext:
@@ -86,7 +94,8 @@ class AlchemistContext:
                  backend: Optional[str] = None,
                  fusion: Optional[bool] = None,
                  bucketing: Optional[bool] = None,
-                 address: Optional[str] = None):
+                 address: Optional[str] = None,
+                 busy_retries: int = 4):
         if address is not None:
             # remote engine: same façade, the traffic just crosses TCP
             # (core/wire.py frames to a core/server.py instance)
@@ -99,6 +108,10 @@ class AlchemistContext:
             engine = AlchemistEngine(make_engine_mesh(num_workers))
         self.engine = engine
         self.chunk_rows = chunk_rows
+        # QoS backpressure: how many times a busy (admission-denied)
+        # submit is retried with capped exponential backoff before the
+        # typed AlchemistBusyError reaches the caller; 0 = fail fast
+        self.busy_retries = max(0, int(busy_retries))
         self._stopped = False
         self._futures: "weakref.WeakSet[AlFuture]" = weakref.WeakSet()
         self._library_cache: dict[str, LibraryProxy] = {}
@@ -174,7 +187,9 @@ class AlchemistContext:
     def configure(self, backend: Optional[str] = None,
                   fusion: Optional[bool] = None,
                   bucketing: Optional[bool] = None,
-                  warmup=None, cache_dir: Optional[str] = None) -> dict:
+                  warmup=None, cache_dir: Optional[str] = None,
+                  weight: Optional[float] = None,
+                  quotas: Optional[dict] = None) -> dict:
         """Select this session's execution environment over the
         ``configure`` protocol endpoint: ``backend`` names a registered
         engine backend (``"jax"`` — the accelerated default — or
@@ -185,10 +200,15 @@ class AlchemistContext:
         list of bucket sizes) AOT-compiles the bucketable catalog and
         indexed hot signatures right now, off the request path;
         ``cache_dir`` points the engine at a persistent compile cache
-        (engine-wide — XLA executables survive restarts). Returns — and
-        records on ``self.backend`` — the effective settings; an unknown
-        backend raises :class:`AlchemistError` listing what the engine
-        offers."""
+        (engine-wide — XLA executables survive restarts). On a
+        QoS-enabled engine (``AlchemistEngine(qos=True)``), ``weight``
+        sets this session's fair-share weight (default 1.0; a weight-2
+        tenant earns twice the dispatch share) and ``quotas`` overrides
+        its admission quotas (keys ``max_queue_depth``,
+        ``max_inflight_bytes``, ``max_resident_bytes``; None = engine
+        default). Returns — and records on ``self.backend`` — the
+        effective settings; an unknown backend raises
+        :class:`AlchemistError` listing what the engine offers."""
         self._check_alive()
         options: dict = {}
         if backend is not None:
@@ -202,6 +222,10 @@ class AlchemistContext:
                 if isinstance(warmup, (list, tuple)) else warmup
         if cache_dir is not None:
             options["cache_dir"] = cache_dir
+        if weight is not None:
+            options["weight"] = weight
+        if quotas is not None:
+            options["quotas"] = dict(quotas)
         res = protocol.decode_result(self.engine.configure(
             protocol.encode_configure(protocol.Configure(
                 session=self.session, options=options))))
@@ -286,13 +310,34 @@ class AlchemistContext:
     def _submit(self, library: str, routine: str,
                 args: dict[str, Any]) -> "AlFuture":
         """Encode + submit one command (args already wire-shaped); shared
-        by the legacy ``call_async`` and the façade RoutineProxy path."""
+        by the legacy ``call_async`` and the façade RoutineProxy path.
+
+        A busy engine (QoS admission denial, ``AlchemistBusyError`` over
+        the wire) is retried up to ``busy_retries`` times with capped
+        exponential backoff, honoring the engine's ``retry_after_s`` hint
+        when it sends one; exhaustion raises the typed
+        :class:`AlchemistBusyError` carrying the last hint."""
         self._check_alive()
-        wire = protocol.encode_command(protocol.Command(
+        payload = protocol.encode_command(protocol.Command(
             library=library, routine=routine, args=args,
             session=self.session))
-        sub = protocol.decode_result(self.engine.submit(wire))
+        delay = _BUSY_BACKOFF_S
+        for attempt in range(self.busy_retries + 1):
+            sub = protocol.decode_result(self.engine.submit(payload))
+            if not (sub.error
+                    and sub.error.startswith("AlchemistBusyError")):
+                break
+            if attempt == self.busy_retries:
+                break
+            hint = sub.retry_after_s
+            time.sleep(min(hint if hint > 0 else delay,
+                           _BUSY_BACKOFF_CAP_S))
+            delay = min(delay * 2, _BUSY_BACKOFF_CAP_S)
         if sub.error:
+            if sub.error.startswith("AlchemistBusyError"):
+                _, _, msg = sub.error.partition(": ")
+                raise AlchemistBusyError(msg or sub.error,
+                                         retry_after_s=sub.retry_after_s)
             raise AlchemistError(sub.error)
         fut = AlFuture(self, sub.task, label=f"{library}.{routine}")
         if sub.cache_hit:

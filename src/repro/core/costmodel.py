@@ -546,6 +546,114 @@ class CompileLog:
             return sorted({r.session for r in self.records})
 
 
+# ---- QoS price model (fair-share virtual time, see core/qos/) ----
+# Iterative solver-class routines (Lanczos SVD, CG, NMF) run tens of
+# matvec passes over their operands per call; single linear kernels run
+# one. The estimate's job is to *rank* tenants' work for fair-share
+# charging at dispatch time, before the task has run — the scheduler
+# reconciles each estimate against the measured ``exec_s`` on
+# completion, so only the relative ordering needs to be right.
+_QOS_ITERATIVE = frozenset({
+    "truncated_svd", "svd", "cg_solve", "nmf", "lsqr",
+})
+_QOS_MODEL_PASSES = 30                # modeled solver iteration count
+_QOS_BYTES_PER_S = 2e9                # modeled per-core streaming rate
+
+
+def routine_price_seconds(library: str, routine: str,
+                          arg_bytes: int = 0) -> float:
+    """Estimated execute-seconds for one routine call: the fixed
+    dispatch cost plus one modeled pass over the operand bytes — or
+    :data:`_QOS_MODEL_PASSES` passes for the iterative solver class
+    (the SVD/CG-class tasks the paper offloads). This is what the
+    fair-share policy charges a session's virtual time at dispatch."""
+    per_pass = max(int(arg_bytes), 0) / _QOS_BYTES_PER_S
+    passes = _QOS_MODEL_PASSES if routine in _QOS_ITERATIVE else 1
+    return TASK_DISPATCH_S + passes * per_pass
+
+
+@dataclasses.dataclass
+class QosRecord:
+    """One event on the multi-tenant QoS layer (see ``core/qos/``).
+
+    ``event`` is ``"admitted"`` (a submit passed admission control),
+    ``"rejected"`` (a submit denied for a quota violation — ``reason``
+    names the quota), ``"throttled"`` (an upload reservation denied:
+    backpressure on the data plane), ``"preempted"`` (a long task
+    yielded at an iteration boundary to a lagging lighter tenant), or
+    ``"complete"`` (a task finished under fair share: ``wait_s`` is its
+    queue wait, ``debt_s`` the reconciliation delta — measured minus
+    estimated execute seconds — charged back to the session's virtual
+    time). ``weight`` is the session's fair-share weight at event time,
+    which is what groups the p50/p99 wait split by weight class."""
+    session: int
+    event: str        # admitted | rejected | throttled | preempted | complete
+    weight: float = 1.0
+    wait_s: float = 0.0
+    debt_s: float = 0.0
+    reason: str = ""
+
+
+class QosLog:
+    """Per-tenant QoS accounting — the observability half of admission
+    control and fair-share dispatch. Where TaskLog shows what each task
+    paid, this log shows what the QoS layer *did about it*: who was
+    admitted, who was pushed back, who yielded, and whether the
+    fair-share queue actually kept light tenants' waits flat under a
+    heavy neighbor (the p50/p99 wait split by weight class)."""
+
+    def __init__(self):
+        self.records: list[QosRecord] = []
+        self._lock = locktrace.make_lock("costmodel.qos")
+
+    def record(self, session: int, event: str, weight: float = 1.0,
+               wait_s: float = 0.0, debt_s: float = 0.0,
+               reason: str = "") -> QosRecord:
+        rec = QosRecord(session=session, event=event, weight=float(weight),
+                        wait_s=float(wait_s), debt_s=float(debt_s),
+                        reason=reason)
+        with self._lock:
+            self.records.append(rec)
+        return rec
+
+    @staticmethod
+    def _summarize(recs: list["QosRecord"]) -> dict:
+        waits = [r.wait_s for r in recs if r.event == "complete"]
+        return {
+            "admitted": sum(1 for r in recs if r.event == "admitted"),
+            "rejected": sum(1 for r in recs if r.event == "rejected"),
+            "throttled": sum(1 for r in recs if r.event == "throttled"),
+            "preempted": sum(1 for r in recs if r.event == "preempted"),
+            "completed": len(waits),
+            "debt_s": sum(r.debt_s for r in recs),
+            "p50_wait_s": percentile(waits, 50),
+            "p99_wait_s": percentile(waits, 99),
+        }
+
+    def stats(self) -> dict:
+        """Engine-wide QoS accounting, plus the same summary split by
+        tenant weight class (every distinct weight seen) — how the
+        fairness claim is checked: light classes' p99 wait must not
+        inflate when a heavy class saturates."""
+        with self._lock:
+            recs = list(self.records)
+        out = self._summarize(recs)
+        out["weight_classes"] = {
+            repr(w): self._summarize([r for r in recs if r.weight == w])
+            for w in sorted({r.weight for r in recs})}
+        return out
+
+    def session_summary(self, session: int) -> dict:
+        """One tenant's admission/backpressure/preemption history."""
+        with self._lock:
+            recs = [r for r in self.records if r.session == session]
+        return {"session": session, **self._summarize(recs)}
+
+    def sessions(self) -> list[int]:
+        with self._lock:
+            return sorted({r.session for r in self.records})
+
+
 @dataclasses.dataclass
 class CacheRecord:
     """One cache event on the bridge's amortization layer.

@@ -72,7 +72,10 @@ from repro.core import backends as backend_registry
 from repro.core import cache as caching, compilecache, protocol, \
     scheduler as scheduling
 from repro.core.backends import base as backend_base
-from repro.core.costmodel import CacheLog, CompileLog, TaskLog, TransferLog
+from repro.core.costmodel import CacheLog, CompileLog, QosLog, TaskLog, \
+    TransferLog, routine_price_seconds
+from repro.core.qos import QUOTA_KEYS, AdmissionController, FairShareQueue, \
+    QuotaConfig
 from repro.core.handles import BLOCK2D, LAYOUTS, REPLICATED, ROWBLOCK, \
     MatrixHandle
 from repro.core.libraries import spec as specs
@@ -123,6 +126,10 @@ class Session:
     backend: str = ""
     fusion: bool = True
     bucketing: Optional[bool] = None
+    # QoS fair-share weight (``configure(weight=...)``): this tenant's
+    # proportional claim on the worker pool when the engine runs with
+    # ``qos=True``. Meaningless (and left at 1.0) otherwise.
+    weight: float = 1.0
 
 
 @dataclasses.dataclass
@@ -228,6 +235,14 @@ class AlchemistEngine:
     a library loads; ``warmup_grid`` is the bucket subset catalog warmup
     covers; ``program_cache_size`` bounds each backend's in-process
     compiled-program LRU. ``compile_log`` is the accounting surface.
+
+    Multi-tenant QoS (``core/qos``): ``qos=True`` switches dispatch to
+    weighted fair share and turns on admission control; ``qos_quotas``
+    sets the engine-wide per-tenant quota defaults (keys:
+    ``max_queue_depth``, ``max_inflight_bytes``, ``max_resident_bytes``);
+    ``qos_yield_threshold_s`` is the virtual-time gap at which a long
+    iterative task cooperatively yields to a starved tenant.
+    ``qos_log`` is the accounting surface (see :meth:`qos_stats`).
     """
 
     def __init__(self, mesh: Optional[Mesh] = None,
@@ -242,7 +257,10 @@ class AlchemistEngine:
                  bucket_grid=None,
                  warmup_on_load: bool = False,
                  warmup_grid=None,
-                 program_cache_size: Optional[int] = None):
+                 program_cache_size: Optional[int] = None,
+                 qos: bool = False,
+                 qos_quotas: Optional[dict] = None,
+                 qos_yield_threshold_s: float = 0.05):
         self.mesh = mesh if mesh is not None else make_engine_mesh()
         self.num_workers = self.mesh.devices.size
         self.memory_budget_bytes = memory_budget_bytes
@@ -308,8 +326,32 @@ class AlchemistEngine:
         self._session_ids = itertools.count(1)
         self._clock = itertools.count(1)
         self._state_lock = locktrace.make_rlock("engine.state")
+        # ---- multi-tenant QoS (core/qos) ----
+        # Default OFF: a plain engine keeps the scheduler's FIFO dispatch
+        # bit-for-bit (FifoReadyQueue) and admits everything. With
+        # qos=True the ready queue becomes weighted fair share, submits
+        # and uploads pass admission control (``qos_quotas`` sets the
+        # engine-wide per-tenant defaults; sessions override via
+        # ``configure(quotas=...)``), and long iterative routines yield
+        # cooperatively at iteration boundaries.
+        self.qos_enabled = bool(qos)
+        self.qos_log = QosLog()
+        self.admission: Optional[AdmissionController] = None
+        self._qos_policy: Optional[FairShareQueue] = None
+        if qos_quotas is not None and not self.qos_enabled:
+            raise ValueError(
+                "qos_quotas requires qos=True (quotas on a QoS-disabled "
+                "engine would silently never be enforced)")
+        if self.qos_enabled:
+            defaults = QuotaConfig(**self._validate_quotas(qos_quotas or {}))
+            self.admission = AdmissionController(defaults=defaults,
+                                                 log=self.qos_log)
+            self._qos_policy = FairShareQueue(
+                log=self.qos_log,
+                yield_threshold_s=float(qos_yield_threshold_s))
         self.scheduler = scheduling.TaskScheduler(
-            num_workers=scheduler_workers, on_finish=self._record_task)
+            num_workers=scheduler_workers, on_finish=self._record_task,
+            policy=self._qos_policy)
 
     # ---- session lifecycle (the connect/disconnect handshake, §3.1.1) ----
     def connect(self, client: str = "") -> Session:
@@ -330,6 +372,10 @@ class AlchemistEngine:
             if session != SYSTEM_SESSION:
                 self._sessions.pop(session, None)
         self.scheduler.forget_session(session)
+        if self.admission is not None:
+            # a client that vanished while throttled must not leak its
+            # reserved upload bytes or its quota override
+            self.admission.forget_session(session)
 
     def free_session(self, session: int) -> int:
         """Reclaim every handle binding a session owns (regardless of
@@ -499,7 +545,7 @@ class AlchemistEngine:
                     "a session first")
             sess = self.session(cfg.session)     # raises if unknown
             supported = {"backend", "fusion", "bucketing", "warmup",
-                         "cache_dir"}
+                         "cache_dir", "weight", "quotas"}
             unknown = sorted(set(cfg.options) - supported)
             if unknown:
                 raise ValueError(
@@ -540,6 +586,22 @@ class AlchemistEngine:
                     not isinstance(cfg.options["cache_dir"], str):
                 raise TypeError(
                     "configure option 'cache_dir' must be a str path")
+            quotas = None
+            if "weight" in cfg.options or "quotas" in cfg.options:
+                if not self.qos_enabled:
+                    raise ValueError(
+                        "QoS is disabled on this engine; construct it "
+                        "with AlchemistEngine(qos=True) before "
+                        "configuring weight or quotas")
+            if "weight" in cfg.options:
+                w = cfg.options["weight"]
+                if isinstance(w, bool) or not isinstance(w, (int, float)) \
+                        or not w > 0:
+                    raise TypeError(
+                        "configure option 'weight' must be a positive "
+                        "number")
+            if "quotas" in cfg.options:
+                quotas = self._validate_quotas(cfg.options["quotas"])
             with self._state_lock:
                 if "backend" in cfg.options:
                     sess.backend = cfg.options["backend"]
@@ -551,6 +613,8 @@ class AlchemistEngine:
                     # engine-wide by nature (the JAX disk cache is a
                     # process-global config) — documented, not hidden
                     self._set_cache_dir(cfg.options["cache_dir"])
+                if "weight" in cfg.options:
+                    sess.weight = float(cfg.options["weight"])
                 effective = {
                     "session": sess.id,
                     "backend": sess.backend or self.default_backend,
@@ -560,6 +624,16 @@ class AlchemistEngine:
                     else self.bucket_policy.enabled,
                     "cache_dir": self.compile_cache_dir or "",
                 }
+            if "weight" in cfg.options:
+                # rank order: scheduler.cv (20) nests fine above the
+                # state lock, but there is no reason to hold it here
+                self.scheduler.set_weight(sess.id, sess.weight)
+            if quotas is not None:
+                self.admission.set_quota(sess.id, quotas)
+            if self.qos_enabled:
+                q = self.admission.quota_for(sess.id)
+                effective["weight"] = sess.weight
+                effective["quotas"] = dataclasses.asdict(q)
             if cfg.options.get("warmup"):
                 effective["warmup"] = self.warmup(
                     backend=effective["backend"], grid=warmup_grid,
@@ -696,8 +770,18 @@ class AlchemistEngine:
         name = backend or self.default_backend
         be = self.backends.get(name)
         stats = {"backend": name, "catalog": 0, "replayed": 0,
-                 "compiled": 0, "cached": 0, "warmup_s": 0.0}
+                 "compiled": 0, "cached": 0, "warmup_s": 0.0,
+                 "skipped": False, "reason": ""}
         if be is None or not getattr(be, "supports_aot", False):
+            # explicit no-op, not a silent one: the reference backend
+            # (and any other eager backend) has no AOT surface to warm,
+            # and the caller deserves to know nothing was compiled
+            # rather than inferring it from zero counts
+            stats["skipped"] = True
+            stats["reason"] = (
+                f"backend {name!r} is not registered" if be is None else
+                f"backend {name!r} has no AOT compile surface; "
+                "warmup is a no-op")
             return stats
         t_start = time.perf_counter()
         grid_t = tuple(int(g) for g in (grid or self.warmup_grid))
@@ -782,6 +866,114 @@ class AlchemistEngine:
             n: be.program_cache_info()
             for n, be in self.backends.items()
             if hasattr(be, "program_cache_info")}
+        out["active_backend"] = self.default_backend
+        return out
+
+    # ---- multi-tenant QoS (core/qos) ----
+    @staticmethod
+    def _validate_quotas(quotas: dict) -> dict:
+        """Validate a quota dict (ctor ``qos_quotas`` or a
+        ``configure(quotas=...)`` override): known keys only, values
+        ``None`` (disable that check) or a non-negative int."""
+        if not isinstance(quotas, dict):
+            raise TypeError("quotas must be a dict of quota knobs")
+        unknown = sorted(set(quotas) - set(QUOTA_KEYS))
+        if unknown:
+            raise ValueError(
+                f"unknown quota knob(s) {unknown}; supported: "
+                f"{', '.join(QUOTA_KEYS)}")
+        out = {}
+        for k, v in quotas.items():
+            if v is not None and (isinstance(v, bool)
+                                  or not isinstance(v, int) or v < 0):
+                raise TypeError(
+                    f"quota knob {k!r} must be None or a non-negative "
+                    f"int, got {v!r}")
+            out[k] = v
+        return out
+
+    def _task_price(self, cmd: protocol.Command) -> float:
+        """Fair-share price estimate for a command: the cost model's
+        routine price over the bytes of its resident handle args.
+        Computed at submit time on the endpoint thread (NOT under the
+        scheduler lock — the policy only reads the stamped value)."""
+        nbytes = 0
+        with self._state_lock:
+            def walk(v):
+                nonlocal nbytes
+                if isinstance(v, MatrixHandle):
+                    entry = self._entries.get(v.id)
+                    if entry is not None:
+                        nbytes += self._stores[entry.store].nbytes
+                elif isinstance(v, dict):
+                    for x in v.values():
+                        walk(x)
+                elif isinstance(v, (list, tuple)):
+                    for x in v:
+                        walk(x)
+            for v in cmd.args.values():
+                walk(v)
+        return routine_price_seconds(cmd.library, cmd.routine, nbytes)
+
+    def _session_resident_bytes(self, session: int) -> int:
+        """Store bytes owned by one session's bindings (each shared
+        store counted once) — the resident-memory quota input."""
+        with self._state_lock:
+            sess = self._sessions.get(session)
+            if sess is None:
+                return 0
+            seen: set[int] = set()
+            total = 0
+            for hid in sess.owned:
+                entry = self._entries.get(hid)
+                if entry is not None and entry.store not in seen:
+                    seen.add(entry.store)
+                    total += self._stores[entry.store].nbytes
+            return total
+
+    def _session_weight(self, session: int) -> float:
+        sess = self._sessions.get(session)
+        return sess.weight if sess is not None else 1.0
+
+    def reserve_upload(self, session: int, nbytes: int
+                       ) -> Optional[tuple[str, float]]:
+        """Data-plane backpressure: reserve in-flight upload bytes for a
+        staged transfer (the server calls this at UPLOAD_BEGIN). None =
+        reserved; ``(reason, retry_after_s)`` = the tenant is over its
+        in-flight quota and nothing was reserved. Always None with QoS
+        off."""
+        if self.admission is None:
+            return None
+        return self.admission.reserve_upload(
+            session, nbytes, weight=self._session_weight(session))
+
+    def release_upload(self, session: int, nbytes: int) -> None:
+        """Release an upload reservation (commit, abort, teardown)."""
+        if self.admission is not None:
+            self.admission.release_upload(session, nbytes)
+
+    def _qos_yield(self, session: int) -> None:
+        """Iteration-boundary hook body installed on worker threads
+        (``backends.base.set_yield_check``): when the fair-share queue
+        says another tenant trails this one's virtual time, briefly
+        release the host (the sleep drops the GIL, letting a light
+        tenant's worker run) and account the preemption."""
+        if self._qos_policy is None:
+            return
+        if self.scheduler.should_yield(session):
+            self.qos_log.record(session=session, event="preempted",
+                                weight=self._session_weight(session))
+            time.sleep(0.002)
+
+    def qos_stats(self) -> dict:
+        """Engine-wide QoS accounting: admitted/rejected/throttled/
+        preempted counters, fair-share debt, p50/p99 wait split by
+        weight class (``costmodel.QosLog``), plus live ready-queue
+        depths per session under fair share."""
+        out = self.qos_log.stats()
+        out["enabled"] = self.qos_enabled
+        if self._qos_policy is not None:
+            out["ready_depths"] = self.scheduler.ready_depths()
         return out
 
     # ---- handle lifecycle (bindings over refcounted stores) ----
@@ -1346,13 +1538,30 @@ class AlchemistEngine:
             fast = self._cache_fast_path(cmd)
             if fast is not None:
                 return fast
+        # admission control (core/qos): checked AFTER the cache fast
+        # path — a memoized answer costs the engine nothing, so serving
+        # it to an over-quota tenant is strictly better than bouncing —
+        # and BEFORE any task is minted, so a denial commits no state.
+        price = 0.0
+        if self.admission is not None:
+            price = self._task_price(cmd)
+            denial = self.admission.admit_submit(
+                cmd.session, weight=self._session_weight(cmd.session),
+                queue_depth=self.scheduler.session_depth(cmd.session),
+                resident_bytes=self._session_resident_bytes(cmd.session),
+                est_exec_s=price)
+            if denial is not None:
+                reason, retry = denial
+                return protocol.encode_result(protocol.Result(
+                    values={}, error=f"AlchemistBusyError: {reason}",
+                    session=cmd.session, retry_after_s=retry))
         barrier = cmd.library == ENGINE_LIBRARY
         try:
             task = self.scheduler.submit(
                 lambda t, c=cmd: self._run_task(c, t), session=cmd.session,
                 reads=reads, writes=writes, data_deps=data_deps,
                 barrier=barrier, label=f"{cmd.library}.{cmd.routine}",
-                payload=cmd)
+                payload=cmd, price=price)
         except Exception as e:   # e.g. scheduler shut down: stay on-wire
             return protocol.encode_result(protocol.Result(
                 values={}, error=f"{type(e).__name__}: {e}",
@@ -1510,6 +1719,12 @@ class AlchemistEngine:
         drained), so input fingerprints — and therefore the key — already
         reflect those writes. This is also what catches hits the submit
         fast path had to refuse while a writer was in flight."""
+        if self._qos_policy is not None:
+            # cooperative preemption: iterative implementations call
+            # backends.base.yield_check() at iteration boundaries; the
+            # hook is per-worker-thread and cleared in the finally
+            backend_base.set_yield_check(
+                lambda s=cmd.session: self._qos_yield(s))
         try:
             cmd = self._resolve_deferred(cmd)
             sess = self.session(cmd.session)
@@ -1561,6 +1776,9 @@ class AlchemistEngine:
             raise scheduling.TaskFailure(
                 protocol.encode_result(protocol.Result(
                     values={}, error=msg, session=cmd.session)), msg)
+        finally:
+            if self._qos_policy is not None:
+                backend_base.set_yield_check(None)
 
     # ---- backend execution (the plan layer) ----
     def _execute_step(self, backend: backend_base.ExecutionBackend,
@@ -1881,6 +2099,7 @@ class AlchemistEngine:
         lead_wire: Optional[bytes] = None
         lead_error: Optional[str] = None
         for i, c in enumerate(cmds):
+            backend_base.yield_check()   # QoS boundary between steps
             if failed_at is not None:
                 msg = (f"upstream task #{task_ids[failed_at]} failed: "
                        f"{failed_msg}")
@@ -1959,8 +2178,19 @@ class AlchemistEngine:
         return {"engine": eng.compile_stats(),
                 "session": eng.compile_log.session_summary(view.session.id)}
 
+    @specs.routine(outputs=())
+    def _builtin_qos_stats(view):
+        """Wire path for QoS accounting: the engine-wide QosLog summary
+        (admitted/rejected/throttled/preempted/completed, reconciled
+        debt seconds, p50/p99 queue wait per weight class) plus whether
+        QoS is enabled and, when it is, the per-session ready-queue
+        depths — how a tenant checks whether it is being throttled and
+        what its fair share is buying."""
+        return view._engine.qos_stats()
+
     _BUILTINS = {"load_library": _builtin_load_library,
-                 "compile_stats": _builtin_compile_stats}
+                 "compile_stats": _builtin_compile_stats,
+                 "qos_stats": _builtin_qos_stats}
 
     def _record_task(self, task: scheduling.Task) -> None:
         """Scheduler completion hook -> per-task cost accounting,

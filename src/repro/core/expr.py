@@ -59,6 +59,18 @@ class AlchemistError(RuntimeError):
     pass
 
 
+class AlchemistBusyError(AlchemistError):
+    """Admission control denied the request: the tenant is at one of its
+    QoS quotas (queue depth, in-flight upload bytes, resident handle
+    memory — see ``core/qos/admission.py``). ``retry_after_s`` is the
+    engine's estimate of when capacity frees; the client-side backoff
+    loop in ``context._submit`` honors it before re-raising."""
+
+    def __init__(self, message: str, retry_after_s: float = 0.0):
+        super().__init__(message)
+        self.retry_after_s = float(retry_after_s)
+
+
 class AlFuture:
     """Client-side handle on one submitted task (the async half of the
     ACI). ``result()`` blocks on the engine's ``wait`` endpoint;

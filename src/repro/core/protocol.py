@@ -153,6 +153,11 @@ class Result:
     not wait for. A cache hit at *submit* time comes back with
     ``state="DONE"`` and ``task=0``: no task was ever minted (the
     DONE-on-submit fast path).
+
+    ``retry_after_s`` is non-zero only on admission-control denials
+    (``error`` starts with ``AlchemistBusyError``): the engine's estimate
+    of when capacity frees up, which the client's backoff loop honors
+    instead of guessing (core/qos).
     """
     values: dict[str, Any]
     elapsed: float = 0.0
@@ -164,6 +169,7 @@ class Result:
     exec_s: float = 0.0
     cache_hit: bool = False
     saved_s: float = 0.0
+    retry_after_s: float = 0.0
 
 
 def _pack_value(v):
@@ -302,6 +308,7 @@ def encode_result(res: Result) -> bytes:
         "exec_s": res.exec_s,
         "cache_hit": res.cache_hit,
         "saved_s": res.saved_s,
+        "retry_after_s": res.retry_after_s,
     })
 
 
@@ -314,4 +321,5 @@ def decode_result(data: bytes) -> Result:
                   task=d.get("task", 0), state=d.get("state", ""),
                   wait_s=d.get("wait_s", 0.0), exec_s=d.get("exec_s", 0.0),
                   cache_hit=d.get("cache_hit", False),
-                  saved_s=d.get("saved_s", 0.0))
+                  saved_s=d.get("saved_s", 0.0),
+                  retry_after_s=d.get("retry_after_s", 0.0))

@@ -50,6 +50,7 @@ import time
 from typing import Any, Callable, Iterable, Optional
 
 from repro.analysis import locktrace
+from repro.core.qos.policy import FifoReadyQueue
 
 QUEUED = "QUEUED"
 RUNNING = "RUNNING"
@@ -90,6 +91,10 @@ class Task:
     # opaque caller state: the engine stores the decoded Command here,
     # which is what chain claiming hands back for fused execution
     payload: Any = None
+    # estimated execute-seconds (cost model price) — what the fair-share
+    # policy charges the session's virtual time at dispatch; 0.0 when
+    # QoS is off (the engine skips pricing entirely)
+    price: float = 0.0
     dependents: list[int] = dataclasses.field(default_factory=list)
     submitted_at: float = 0.0
     started_at: float = 0.0
@@ -108,16 +113,25 @@ class TaskScheduler:
     benchmark compares against. ``on_finish`` is called (outside the
     scheduler lock) with each task as it completes, in completion order —
     the engine uses it for per-task cost accounting.
+
+    ``policy`` selects which ready task a freed worker picks: the
+    default :class:`~repro.core.qos.policy.FifoReadyQueue` reproduces
+    the original ready deque exactly; a
+    :class:`~repro.core.qos.policy.FairShareQueue` dispatches by
+    weighted virtual time (multi-tenant QoS). The policy object is
+    mutated only under the scheduler's condition variable and must
+    never call into the engine.
     """
 
     def __init__(self, num_workers: int = 4,
-                 on_finish: Optional[Callable[[Task], None]] = None):
+                 on_finish: Optional[Callable[[Task], None]] = None,
+                 policy=None):
         self.num_workers = max(1, int(num_workers))
         self.on_finish = on_finish
         self._cv = locktrace.make_condition("scheduler.cv")
         self._tasks: dict[int, Task] = {}
         self._ids = itertools.count(1)
-        self._ready: collections.deque[int] = collections.deque()
+        self._ready = policy if policy is not None else FifoReadyQueue()
         self._session_tail: dict[int, int] = {}
         self._barrier_tail: Optional[int] = None
         self._writer: dict[int, int] = {}          # handle id -> last writer
@@ -134,7 +148,8 @@ class TaskScheduler:
     def submit(self, fn: Callable[[Task], Any], *, session: int = 0,
                reads: Iterable[int] = (), writes: Iterable[int] = (),
                data_deps: Iterable[int] = (), barrier: bool = False,
-               label: str = "", payload: Any = None) -> Task:
+               label: str = "", payload: Any = None,
+               price: float = 0.0) -> Task:
         """Add a task; returns immediately with the QUEUED task.
 
         ``reads``/``writes`` are engine handle IDs the task will resolve
@@ -153,7 +168,7 @@ class TaskScheduler:
                         label=label, barrier=barrier,
                         data_deps=tuple(dict.fromkeys(data_deps)),
                         reads=tuple(reads), writes=tuple(writes),
-                        payload=payload,
+                        payload=payload, price=float(price),
                         submitted_at=time.perf_counter())
             deps: set[int] = set()
 
@@ -205,7 +220,7 @@ class TaskScheduler:
                 if t is not None and tid not in deps:
                     t.dependents.append(task.id)
             if task.deps == 0:
-                self._ready.append(task.id)
+                self._ready.push(task)
             self._spawn_workers()
             self._cv.notify_all()
             return task
@@ -260,7 +275,36 @@ class TaskScheduler:
             if self._session_tail.get(session) is not None and \
                     self._session_tail[session] not in self._tasks:
                 self._session_tail.pop(session, None)
+            self._ready.forget_session(session)
             return len(gone)
+
+    def session_depth(self, session: int) -> int:
+        """QUEUED + RUNNING task count for one session — the queue-depth
+        number admission control checks against a tenant's quota."""
+        with self._cv:
+            return sum(1 for t in self._tasks.values()
+                       if t.session == session
+                       and t.state in (QUEUED, RUNNING))
+
+    def set_weight(self, session: int, weight: float) -> None:
+        """Set a session's fair-share weight on the dispatch policy
+        (no-op under the default FIFO policy)."""
+        with self._cv:
+            self._ready.set_weight(session, weight)
+
+    def should_yield(self, session: int) -> bool:
+        """Ask the dispatch policy whether a long task of this session
+        should yield at its next iteration boundary (a lighter tenant's
+        virtual time is far behind). Always False under FIFO."""
+        with self._cv:
+            return self._ready.should_yield(session)
+
+    def ready_depths(self) -> dict:
+        """Per-session ready-queue depths (diagnostics; empty under the
+        default FIFO policy, which keeps no per-session state)."""
+        with self._cv:
+            depths = getattr(self._ready, "depths", None)
+            return depths() if depths is not None else {}
 
     def running(self) -> int:
         with self._cv:
@@ -449,7 +493,7 @@ class TaskScheduler:
                     self._cv.wait()
                 if self._shutdown and not self._ready:
                     return
-                task = self._tasks[self._ready.popleft()]
+                task = self._tasks[self._ready.pop()]
                 task.state = RUNNING
                 task.started_at = time.perf_counter()
                 task.wait_s = task.started_at - task.submitted_at
@@ -485,6 +529,9 @@ class TaskScheduler:
             task.state = state
             task.result = result
             task.error = error
+            # fair-share reconciliation: measured exec_s vs the price
+            # charged at dispatch (no-op on the default FIFO policy)
+            self._ready.task_done(task)
             if worker:          # claimed tasks never held a worker slot
                 self._running -= 1
             for dep_id in task.dependents:
@@ -493,7 +540,7 @@ class TaskScheduler:
                     continue
                 dep.deps -= 1
                 if dep.deps == 0 and dep.state == QUEUED:
-                    self._ready.append(dep_id)
+                    self._ready.push(dep)
             # hazard maps track only live constraints: a finished task
             # imposes none, so drop its entries (bounds both maps by the
             # in-flight task count)

@@ -70,6 +70,7 @@ class _Upload:
     sizes: list = dataclasses.field(default_factory=list)
     wire_bytes: int = 0
     error: str = ""
+    reserved: int = 0      # in-flight bytes held against the QoS quota
 
 
 class _Connection:
@@ -102,8 +103,20 @@ class _Connection:
         self.server.wire_log.record(endpoint, frames_out=1,
                                     bytes_out=len(frame))
 
-    def _send_result(self, endpoint: str, result_bytes: bytes) -> None:
-        self._send_frame(endpoint, wire.FRAME_RESULT, result_bytes)
+    def _send_result(self, endpoint: str, result_bytes: bytes,
+                     allow_throttle: bool = False) -> None:
+        # admission-control denials ride a THROTTLE frame, not RESULT, so
+        # the wire itself distinguishes "engine is full, retry_after_s"
+        # from a normal reply — only on the frame types whose reply sets
+        # declare THROTTLE (COMMAND, UPLOAD_BEGIN). The substring check
+        # is a cheap pre-filter; the decode confirms it is really the
+        # error head and not payload bytes that happen to match.
+        ftype = wire.FRAME_RESULT
+        if allow_throttle and b"AlchemistBusyError" in result_bytes:
+            res = protocol.decode_result(result_bytes)
+            if res.error.startswith("AlchemistBusyError"):
+                ftype = wire.FRAME_THROTTLE
+        self._send_frame(endpoint, ftype, result_bytes)
 
     # ---- lifecycle ----------------------------------------------------
     def _run(self) -> None:
@@ -136,6 +149,14 @@ class _Connection:
                 return                      # peer vanished mid-reply
 
     def _teardown(self) -> None:
+        for up in self.uploads.values():
+            # a vanished client's half-streamed uploads release their
+            # in-flight quota reservations before the data is discarded
+            if up.reserved:
+                try:
+                    self.engine.release_upload(up.session, up.reserved)
+                except Exception:
+                    pass                    # engine already shut down
         self.uploads.clear()                # discard half-streamed data
         for sid in sorted(self.sessions):
             # the client is gone without a disconnect handshake: run the
@@ -213,7 +234,9 @@ class _Connection:
                 reply = getattr(self.engine, endpoint)(payload)
             except Exception as e:
                 reply = _error_result(0, e)
-            self._send_result(endpoint, reply)
+            self._send_result(
+                endpoint, reply,
+                allow_throttle=(frame_type == wire.FRAME_COMMAND))
 
     def _do_handshake(self, payload: bytes) -> None:
         try:
@@ -270,12 +293,27 @@ class _Connection:
         try:
             d = msgpack.unpackb(payload)
             self.engine.session(d["session"])     # fail fast, pre-stream
+            shape = tuple(d["shape"])
+            nbytes = int(np.prod(shape, dtype=np.int64)
+                         ) * np.dtype(d["dtype"]).itemsize
+            # end-to-end backpressure: reserve the declared bytes against
+            # the tenant's in-flight quota BEFORE any chunk is staged; a
+            # denial replies on a THROTTLE frame and stages nothing
+            denial = self.engine.reserve_upload(d["session"], nbytes)
+            if denial is not None:
+                reason, retry = denial
+                self._send_result("upload", protocol.encode_result(
+                    protocol.Result(
+                        values={}, error=f"AlchemistBusyError: {reason}",
+                        session=d["session"], retry_after_s=retry)),
+                    allow_throttle=True)
+                return
             uid = next(self._upload_ids)
             self.uploads[uid] = _Upload(
-                shape=tuple(d["shape"]), dtype=d["dtype"],
+                shape=shape, dtype=d["dtype"],
                 session=d["session"], name=d.get("name"),
                 num_chunks=d["num_chunks"], single=d.get("single", False),
-                wire_bytes=frame_len)
+                wire_bytes=frame_len, reserved=nbytes)
             reply = protocol.encode_result(protocol.Result(
                 values={"upload": uid}, session=d["session"]))
         except Exception as e:
@@ -313,6 +351,12 @@ class _Connection:
             up = self.uploads.pop(d["upload"], None)
             if up is None:
                 raise KeyError(f"unknown upload #{d['upload']}")
+            if up.reserved:
+                # the transfer is no longer in flight either way: the
+                # commit below turns it into resident handle memory
+                # (covered by the resident quota), a failure discards it
+                self.engine.release_upload(up.session, up.reserved)
+                up.reserved = 0
             if up.error:
                 raise RuntimeError(f"upload failed mid-stream: {up.error}")
             session = up.session

@@ -91,17 +91,24 @@ class FrameSpec:
 FRAME_SPECS: tuple[FrameSpec, ...] = (
     # control plane (payload = the matching protocol.py codec)
     FrameSpec("HANDSHAKE", 0x01, "request", "handshake", ("RESULT",)),
-    FrameSpec("COMMAND", 0x02, "request", "submit", ("RESULT",)),
+    FrameSpec("COMMAND", 0x02, "request", "submit",
+              ("RESULT", "THROTTLE")),
     FrameSpec("TASK_OP", 0x03, "request", "task_op", ("RESULT",)),
     FrameSpec("DESCRIBE", 0x04, "request", "describe", ("RESULT",)),
     FrameSpec("CONFIGURE", 0x05, "request", "configure", ("RESULT",)),
     FrameSpec("FREE", 0x06, "request", "free", ("RESULT",)),
     FrameSpec("RESULT", 0x10, "reply"),
+    # THROTTLE carries the same Result payload as RESULT but names the
+    # admission-control outcome in the frame type itself: the engine is
+    # refusing (over-quota tenant), not failing — clients back off for
+    # ``retry_after_s`` instead of treating it as an error (core/qos)
+    FrameSpec("THROTTLE", 0x11, "reply"),
     FrameSpec("ERROR", 0x7F, "error"),
     # data plane (chunked transfers, §3.2)
     FrameSpec("ALIAS_LOOKUP", 0x20, "request", "alias_lookup",
               ("RESULT",)),
-    FrameSpec("UPLOAD_BEGIN", 0x21, "request", "upload", ("RESULT",)),
+    FrameSpec("UPLOAD_BEGIN", 0x21, "request", "upload",
+              ("RESULT", "THROTTLE")),
     # pipelined: no per-chunk ack
     FrameSpec("UPLOAD_CHUNK", 0x22, "request", "upload"),
     FrameSpec("UPLOAD_COMMIT", 0x23, "request", "upload", ("RESULT",)),
@@ -124,6 +131,7 @@ FRAME_DESCRIBE = FRAMES_BY_NAME["DESCRIBE"].code
 FRAME_CONFIGURE = FRAMES_BY_NAME["CONFIGURE"].code
 FRAME_FREE = FRAMES_BY_NAME["FREE"].code
 FRAME_RESULT = FRAMES_BY_NAME["RESULT"].code
+FRAME_THROTTLE = FRAMES_BY_NAME["THROTTLE"].code
 FRAME_ERROR = FRAMES_BY_NAME["ERROR"].code
 FRAME_ALIAS_LOOKUP = FRAMES_BY_NAME["ALIAS_LOOKUP"].code
 FRAME_UPLOAD_BEGIN = FRAMES_BY_NAME["UPLOAD_BEGIN"].code
@@ -286,6 +294,8 @@ _MESSAGE_CODECS: dict[type, tuple[int, Callable, Callable]] = {
 }
 _FRAME_DECODERS = {ftype: dec
                    for ftype, _, dec in _MESSAGE_CODECS.values()}
+# THROTTLE shares RESULT's payload codec — only the frame type differs
+_FRAME_DECODERS[FRAME_THROTTLE] = protocol.decode_result
 
 
 def encode_message(msg) -> bytes:
@@ -372,10 +382,28 @@ def _rebuild_engine_error(error: str) -> Exception:
     ``pytest.raises(KeyError, match=...)`` behaves identically on both
     bridges. Unknown types come back as :class:`RemoteFault`."""
     name, _, msg = error.partition(": ")
+    if name == "AlchemistBusyError":
+        from repro.core.expr import AlchemistBusyError
+        return AlchemistBusyError(msg or error)
     cls = {"KeyError": KeyError, "ValueError": ValueError,
            "TypeError": TypeError, "RuntimeError": RuntimeError,
            "TimeoutError": TimeoutError}.get(name)
     return cls(msg) if cls is not None else RemoteFault(error)
+
+
+def raise_engine_error(res: protocol.Result) -> None:
+    """Raise the typed exception a Result's ``error`` string names (no-op
+    on success). Admission denials rebuild as ``AlchemistBusyError``
+    carrying the Result's ``retry_after_s`` hint, so upload callers can
+    back off exactly like the submit path does."""
+    if not res.error:
+        return
+    name, _, msg = res.error.partition(": ")
+    if name == "AlchemistBusyError":
+        from repro.core.expr import AlchemistBusyError
+        raise AlchemistBusyError(msg or res.error,
+                                 retry_after_s=res.retry_after_s)
+    raise _rebuild_engine_error(res.error)
 
 
 class SocketBridge:
@@ -518,8 +546,7 @@ class SocketBridge:
             self._send("upload", FRAME_UPLOAD_BEGIN, begin)
             ftype, reply = self._recv("upload")
             res = protocol.decode_result(reply)
-            if res.error:
-                raise _rebuild_engine_error(res.error)
+            raise_engine_error(res)
             upload_id = res.values["upload"]
             for seq, chunk in enumerate(chunks):
                 self._send("upload", FRAME_UPLOAD_CHUNK, msgpack.packb({
@@ -530,8 +557,7 @@ class SocketBridge:
                 "upload": upload_id, "fingerprint": fp}))
             ftype, reply = self._recv("upload")
         res = protocol.decode_result(reply)
-        if res.error:
-            raise _rebuild_engine_error(res.error)
+        raise_engine_error(res)
         return (res.values["handle"],
                 TransferRecord(**res.values["record"]))
 

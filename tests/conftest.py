@@ -18,6 +18,7 @@ _BRIDGED_SUITES = {
     "test_scheduler_async",
     "test_cache",
     "test_aci_api",
+    "test_qos",
 }
 
 

@@ -5,6 +5,8 @@ plan signatures, the program-cache LRU bound, AOT warmup, the
 persistent executable index + warm-restart zero-recompile round trip,
 fused chains with bucketing on/off, CompileLog accounting, and the
 ``configure`` wire surface (bucketing/warmup/cache_dir options)."""
+import threading
+
 import numpy as np
 import pytest
 
@@ -349,6 +351,40 @@ def test_executable_index_round_trips_plans(tmp_path):
     assert rebuilt is not None
     assert rebuilt.signature() == plan.signature()
     assert idx2.entries(backend="reference") == []
+
+
+def test_executable_index_concurrent_engines_merge_not_clobber(tmp_path):
+    """Two engines sharing a cache dir each loaded the index before the
+    other recorded: without merge-on-write the second save clobbers the
+    first engine's record (last-write-wins). Both must survive."""
+    be = JaxBackend()
+    impl = be.routine_impl("elemental", "multiply")
+    plan_a = _plan(impl, {"A": (32, 16), "B": (16, 8)})
+    plan_b = _plan(impl, {"A": (64, 32), "B": (32, 8)})
+    idx1 = compilecache.ExecutableIndex(str(tmp_path))
+    idx2 = compilecache.ExecutableIndex(str(tmp_path))  # both loaded empty
+    assert idx1.record("jax", plan_a)
+    assert idx2.record("jax", plan_b)   # must fold idx1's record in
+    fresh = compilecache.ExecutableIndex(str(tmp_path))
+    labels = sorted((r["key"] for r in fresh.entries()))
+    assert len(fresh) == 2
+    assert {r["key"] for r in idx1.entries()} <= set(labels)
+
+    # threaded stress: interleaved writers through separate instances
+    # never lose a record
+    shapes = [( (16 * (i + 1), 8), (8, 4) ) for i in range(8)]
+    plans = [_plan(impl, {"A": sa, "B": sb}) for sa, sb in shapes]
+    writers = [compilecache.ExecutableIndex(str(tmp_path))
+               for _ in range(2)]
+    threads = [
+        threading.Thread(target=lambda w=writers[i % 2], p=p:
+                         w.record("jax", p))
+        for i, p in enumerate(plans)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(compilecache.ExecutableIndex(str(tmp_path))) == 2 + len(plans)
 
 
 def test_executable_index_skips_unserializable_plans(tmp_path):

@@ -225,6 +225,92 @@ def test_reconnect_gets_fresh_session_namespace(engine, server):
 
 
 # =====================================================================
+# QoS backpressure faults (admission control + THROTTLE frames)
+# =====================================================================
+def test_vanish_while_throttled_reclaims_reservations():
+    """A tenant that reserves upload quota, gets throttled on a second
+    upload, then vanishes must leak nothing: its open reservation is
+    reclaimed by disconnect and the full quota is available again."""
+    eng = AlchemistEngine(make_engine_mesh(1), qos=True,
+                          qos_quotas={"max_inflight_bytes": 4096})
+    try:
+        with AlchemistServer(engine=eng) as srv:
+            bridge, sid = _connect_bridge(srv)
+            begin = msgpack.packb({"shape": [64, 8], "dtype": "float32",
+                                   "session": sid, "name": None,
+                                   "num_chunks": 4, "single": False})
+            with bridge._lock:
+                bridge._send("upload", wire.FRAME_UPLOAD_BEGIN, begin)
+                ftype, reply = bridge._recv("upload")
+            assert ftype == wire.FRAME_RESULT
+            assert not protocol.decode_result(reply).error
+            assert eng.admission.inflight_bytes(sid) == 64 * 8 * 4
+
+            # a second BEGIN that would overflow the quota earns a
+            # THROTTLE frame with a retry hint — and stages nothing
+            big = msgpack.packb({"shape": [512, 8], "dtype": "float32",
+                                 "session": sid, "name": None,
+                                 "num_chunks": 8, "single": False})
+            with bridge._lock:
+                bridge._send("upload", wire.FRAME_UPLOAD_BEGIN, big)
+                ftype, reply = bridge._recv("upload")
+            assert ftype == wire.FRAME_THROTTLE
+            res = protocol.decode_result(reply)
+            assert res.error.startswith("AlchemistBusyError")
+            assert res.retry_after_s > 0
+            assert eng.admission.inflight_bytes(sid) == 64 * 8 * 4
+
+            bridge.close()              # vanish: BEGIN never committed
+
+            _wait_until(lambda: sid not in _session_ids(eng),
+                        what="session reclaim after throttled vanish")
+            _wait_until(lambda: eng.admission.inflight_bytes(sid) == 0,
+                        what="upload reservation reclaim")
+
+            # the quota is whole again for the next tenant
+            bridge2, sid2 = _connect_bridge(srv)
+            with bridge2._lock:
+                bridge2._send("upload", wire.FRAME_UPLOAD_BEGIN,
+                              msgpack.packb(
+                                  {"shape": [128, 8], "dtype": "float32",
+                                   "session": sid2, "name": None,
+                                   "num_chunks": 4, "single": False}))
+                ftype, reply = bridge2._recv("upload")
+            assert ftype == wire.FRAME_RESULT
+            assert not protocol.decode_result(reply).error
+            bridge2.close()
+    finally:
+        eng.shutdown()
+
+
+def test_throttle_frame_from_client_is_refused(engine, server):
+    """THROTTLE is a reply-role frame: a client sending one as a request
+    gets the typed unknown-request ERROR, and nobody else notices."""
+    ctx = AlchemistContext(address=server.address)
+    try:
+        offender = socket.create_connection((server.host, server.port),
+                                            timeout=30)
+        try:
+            offender.sendall(wire.encode_frame(wire.FRAME_THROTTLE, b""))
+            rfile = offender.makefile("rb")
+            got = wire.read_frame(rfile)
+            assert got is not None and got[0] == wire.FRAME_ERROR
+            err = wire.decode_error(got[1])
+            assert isinstance(err, wire.UnknownFrameType)
+            assert "not a request" in str(err)
+        finally:
+            offender.close()
+
+        # the innocent tenant's connection still works end to end
+        x = RNG.randn(12, 3).astype(np.float32)
+        al = ctx.send_matrix(x)
+        back = ctx.fetch(al.handle).collect()
+        np.testing.assert_array_equal(back, x)
+    finally:
+        ctx.stop()
+
+
+# =====================================================================
 # accounting: logical counts vs physical frames (satellite regression)
 # =====================================================================
 def _workload(ctx):
