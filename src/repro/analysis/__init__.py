@@ -30,13 +30,14 @@ modules import ``repro.core`` — keeping the rules out of this namespace
 at import time is what makes that non-circular.
 """
 
-__all__ = ["locktrace", "findings", "run_all_rules"]
+__all__ = ["locktrace", "statemachine", "findings", "run_all_rules"]
 
 
 def run_all_rules(**overrides):
     """Run every static rule against the real tree (lazy import — see
     module docstring). Returns a list of :class:`findings.Finding`."""
-    from repro.analysis import rules_catalog, rules_source, rules_wire
+    from repro.analysis import (rules_catalog, rules_config, rules_source,
+                                rules_stm, rules_wire)
     out = []
     out.extend(rules_catalog.check_catalog_parity(**{
         k: v for k, v in overrides.items()
@@ -46,4 +47,7 @@ def run_all_rules(**overrides):
     out.extend(rules_source.check_trace_purity())
     out.extend(rules_source.check_no_pickle())
     out.extend(rules_source.check_lock_discipline())
+    out.extend(rules_source.check_lock_ranks())
+    out.extend(rules_stm.check_statemachines())
+    out.extend(rules_config.check_config_surface())
     return out

@@ -28,7 +28,8 @@ from repro.analysis import run_all_rules
 def _run_static(args) -> int:
     found = run_all_rules()
     baseline = F.load_baseline(args.baseline)
-    gate = F.apply_baseline(found, baseline)
+    gate = F.apply_baseline(found, baseline,
+                            allow_stale=args.allow_stale)
 
     if args.write_baseline:
         path = F.write_baseline(found, args.baseline)
@@ -58,9 +59,14 @@ def _run_static(args) -> int:
               f"({len(gate.suppressed)} baselined, "
               f"{len(gate.stale)} stale suppression(s))")
         return 0
-    print(f"repro.analysis: {len(gate.new)} new finding(s) "
-          f"across {n_rules} rule(s) — fix them or baseline with "
-          "--write-baseline (and justify each suppression)")
+    if gate.new:
+        print(f"repro.analysis: {len(gate.new)} new finding(s) "
+              f"across {n_rules} rule(s) — fix them or baseline with "
+              "--write-baseline (and justify each suppression)")
+    else:
+        print(f"repro.analysis: {len(gate.stale)} stale "
+              "suppression(s) — delete the dead rows from "
+              "analysis-baseline.json (or pass --allow-stale locally)")
     return 1
 
 
@@ -123,6 +129,11 @@ def main(argv=None) -> int:
                     help="suppress every current finding into the "
                     "baseline file (adoption escape hatch — justify "
                     "each entry afterwards)")
+    ap.add_argument("--allow-stale", action="store_true",
+                    help="do not fail on stale baseline suppressions "
+                    "(local escape hatch; CI runs without it, so a "
+                    "fixed finding must take its suppression row "
+                    "with it)")
     ap.add_argument("--check-lock-report", metavar="PATH", default=None,
                     help="gate a REPRO_LOCK_TRACE_OUT report instead of "
                     "running the static rules")

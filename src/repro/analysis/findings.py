@@ -110,18 +110,25 @@ def write_baseline(findings: list[Finding],
 
 @dataclasses.dataclass
 class GateResult:
-    """The baseline-aware verdict the CLI and CI key off."""
+    """The baseline-aware verdict the CLI and CI key off.
+
+    Stale suppressions are a hard failure (the ratchet's teeth: a fixed
+    finding must take its suppression row with it, or the baseline rots
+    into a list nobody trusts) unless ``allow_stale`` was requested —
+    the local-run escape hatch for mid-refactor states."""
     new: list[Finding]
     suppressed: list[Finding]
     stale: list[str]            # baselined fingerprints that no longer fire
+    allow_stale: bool = False
 
     @property
     def ok(self) -> bool:
-        return not self.new
+        return not self.new and (self.allow_stale or not self.stale)
 
 
 def apply_baseline(findings: list[Finding],
-                   baseline: dict[str, str]) -> GateResult:
+                   baseline: dict[str, str],
+                   allow_stale: bool = False) -> GateResult:
     new, suppressed = [], []
     seen = set()
     for f in findings:
@@ -129,4 +136,5 @@ def apply_baseline(findings: list[Finding],
         seen.add(fp)
         (suppressed if fp in baseline else new).append(f)
     stale = sorted(fp for fp in baseline if fp not in seen)
-    return GateResult(new=new, suppressed=suppressed, stale=stale)
+    return GateResult(new=new, suppressed=suppressed, stale=stale,
+                      allow_stale=allow_stale)

@@ -56,20 +56,25 @@ ENV_OUT = "REPRO_LOCK_TRACE_OUT"
 LONG_HOLD_S = 0.050
 
 #: The documented lock-ordering rank (lower = acquired first / outer).
-#: A thread holding rank r may only acquire locks of rank > r. Locks
-#: with equal rank must never nest (none do); unknown names (test
-#: fixtures) are exempt from rank checks but still build graph edges.
+#: A thread holding rank r may only acquire locks of rank > r; ranks
+#: are unique (LCK002), so the table IS the total order, and the table
+#: in docs/architecture.md is generated from (and checked against) it.
+#: Unknown names (test fixtures) are exempt from rank checks but still
+#: build graph edges.
 LOCK_RANKS: dict[str, int] = {
     # completion-callback delivery serializes ahead of everything the
     # engine's on_finish hook re-enters (state lock, cost logs)
     "scheduler.delivery": 5,
     # transport layer: each lock is a leaf of its own thread and is
-    # never taken while an engine-layer lock is held
-    "server.conns": 8,
+    # never taken while an engine-layer lock is held (the relative
+    # order among the three is therefore free; unique ranks keep the
+    # documented total order unambiguous)
+    "server.conns": 7,
     "server.send": 8,
-    "wire.bridge": 8,
+    "wire.bridge": 9,
     # the engine state lock may call into the scheduler (hazard probes
-    # under _cache_fast_path) — never the reverse
+    # under _cache_fast_path, session-revalidated task minting) —
+    # never the reverse
     "engine.state": 10,
     # QoS admission sits between the engine and the scheduler: checks
     # run from submit/upload paths and may probe scheduler queue depth
@@ -79,13 +84,14 @@ LOCK_RANKS: dict[str, int] = {
     # worker, outside engine/scheduler locks)
     "backend.programs": 30,
     "compilecache.index": 35,
-    # cost accounting is always a leaf
+    # cost accounting is always a leaf; the logs never nest with each
+    # other, so their relative order is free
     "costmodel.transfer": 40,
-    "costmodel.wire": 40,
-    "costmodel.task": 40,
-    "costmodel.compile": 40,
-    "costmodel.cache": 40,
-    "costmodel.qos": 40,
+    "costmodel.wire": 41,
+    "costmodel.task": 42,
+    "costmodel.compile": 43,
+    "costmodel.cache": 44,
+    "costmodel.qos": 45,
 }
 
 

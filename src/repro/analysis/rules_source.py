@@ -18,10 +18,16 @@
   lock through ``repro.analysis.locktrace``'s named factories. A raw
   ``threading.Lock()`` is invisible to the dynamic lock-order detector,
   which silently un-completes its view of the process.
+* **LCK002** rank-table integrity — every rank in
+  ``locktrace.LOCK_RANKS`` is unique (the table IS the total order, no
+  ambiguous ties), and the rank table documented in
+  ``docs/architecture.md`` (between the ``LOCK_RANK_TABLE`` markers)
+  matches the code exactly — the docs-vs-code drift that rank
+  renumbering would otherwise cause is a gate failure.
 
-All three are AST passes (plus registry introspection for the fusible
-set in TRC001); suppression is by baseline fingerprint, not inline
-comments — see docs/architecture.md.
+All are AST passes (plus registry introspection for the fusible set in
+TRC001 and the rank registry in LCK002); suppression is by baseline
+fingerprint, not inline comments — see docs/architecture.md.
 """
 from __future__ import annotations
 
@@ -308,4 +314,114 @@ def check_lock_discipline(paths: Optional[list[str]] = None
                             "locktrace (make_lock/make_rlock/"
                             "make_condition) so the lock-order "
                             "detector sees every lock in the process"))
+    return out
+
+
+# ---- LCK002: rank-table integrity (code + docs) ------------------------
+_RANK_TABLE_BEGIN = "<!-- LOCK_RANK_TABLE_BEGIN -->"
+_RANK_TABLE_END = "<!-- LOCK_RANK_TABLE_END -->"
+
+
+def _default_doc_path() -> str:
+    root = os.path.dirname(_repo_src())         # .../src -> repo root
+    return os.path.join(root, "docs", "architecture.md")
+
+
+def _parse_rank_table(text: str, path: str
+                      ) -> tuple[Optional[dict[str, int]], list[Finding]]:
+    """lock name -> documented rank, read from the marked table rows
+    (``| <rank> | `name` | prose |``)."""
+    try:
+        begin = text.index(_RANK_TABLE_BEGIN)
+        end = text.index(_RANK_TABLE_END)
+    except ValueError:
+        return None, [Finding(
+            rule="LCK002", file=path, line=1,
+            symbol="docs:rank-table-markers",
+            message=f"docs/architecture.md lacks the {_RANK_TABLE_BEGIN}"
+                    f" / {_RANK_TABLE_END} markers around the lock rank "
+                    "table — LCK002 cannot check docs against code")]
+    out: dict[str, int] = {}
+    findings: list[Finding] = []
+    base_line = text[:begin].count("\n") + 1
+    for i, line in enumerate(text[begin:end].splitlines()):
+        row = line.strip()
+        if not row.startswith("|") or set(row) <= {"|", "-", " "}:
+            continue
+        cells = [c.strip() for c in row.strip("|").split("|")]
+        if len(cells) < 2 or cells[0] in ("rank", ""):
+            continue
+        m = None
+        if cells[1].startswith("`") and cells[1].endswith("`"):
+            m = cells[1].strip("`")
+        try:
+            rank = int(cells[0])
+        except ValueError:
+            rank = None
+        if m is None or rank is None:
+            findings.append(Finding(
+                rule="LCK002", file=path, line=base_line + i,
+                symbol=f"docs:rank-row:{cells[1][:40]}",
+                message=f"unparseable rank-table row {row!r} — expected "
+                        "`| <int rank> | `lock.name` | prose |`"))
+            continue
+        out[m] = rank
+    return out, findings
+
+
+def check_lock_ranks(ranks: Optional[dict[str, int]] = None,
+                     doc_path: Optional[str] = None) -> list[Finding]:
+    """LCK002: unique ranks in code, and docs == code."""
+    from repro.analysis.locktrace import LOCK_RANKS
+    if ranks is None:
+        ranks = LOCK_RANKS
+    if doc_path is None:
+        doc_path = _default_doc_path()
+    out: list[Finding] = []
+    code_file = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "locktrace.py")
+    by_rank: dict[int, list[str]] = {}
+    for name, rank in ranks.items():
+        by_rank.setdefault(rank, []).append(name)
+    for rank, names in sorted(by_rank.items()):
+        if len(names) > 1:
+            out.append(Finding(
+                rule="LCK002", file=code_file, line=1,
+                symbol=f"rank-dup:{rank}",
+                message=f"locks {sorted(names)} share rank {rank} — "
+                        "ranks must be unique so LOCK_RANKS is a total "
+                        "order (equal-rank nesting is undetectable)"))
+    try:
+        with open(doc_path, "r") as f:
+            text = f.read()
+    except OSError:
+        return out + [Finding(
+            rule="LCK002", file=doc_path, line=1,
+            symbol="docs:missing",
+            message="docs/architecture.md not found — the documented "
+                    "lock order cannot be checked")]
+    documented, findings = _parse_rank_table(text, doc_path)
+    out.extend(findings)
+    if documented is None:
+        return out
+    for name in sorted(set(ranks) - set(documented)):
+        out.append(Finding(
+            rule="LCK002", file=doc_path, line=1,
+            symbol=f"docs:undocumented:{name}",
+            message=f"lock {name!r} (rank {ranks[name]}) is registered "
+                    "in locktrace.LOCK_RANKS but missing from the "
+                    "documented rank table"))
+    for name in sorted(set(documented) - set(ranks)):
+        out.append(Finding(
+            rule="LCK002", file=doc_path, line=1,
+            symbol=f"docs:stale:{name}",
+            message=f"documented lock {name!r} is not registered in "
+                    "locktrace.LOCK_RANKS — stale docs row"))
+    for name in sorted(set(documented) & set(ranks)):
+        if documented[name] != ranks[name]:
+            out.append(Finding(
+                rule="LCK002", file=doc_path, line=1,
+                symbol=f"docs:rank-drift:{name}",
+                message=f"documented rank {documented[name]} for "
+                        f"{name!r} != code rank {ranks[name]}"))
     return out

@@ -67,10 +67,10 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.analysis import locktrace
+from repro.analysis import locktrace, statemachine
 from repro.core import backends as backend_registry
-from repro.core import cache as caching, compilecache, protocol, \
-    scheduler as scheduling
+from repro.core import cache as caching, compilecache, configopts, \
+    protocol, scheduler as scheduling
 from repro.core.backends import base as backend_base
 from repro.core.costmodel import CacheLog, CompileLog, QosLog, TaskLog, \
     TransferLog, routine_price_seconds
@@ -130,6 +130,11 @@ class Session:
     # proportional claim on the worker pool when the engine runs with
     # ``qos=True``. Meaningless (and left at 1.0) otherwise.
     weight: float = 1.0
+    # Teardown flag, flipped under the engine state lock as disconnect's
+    # first act. ``submit``/``reserve_upload`` re-check it under the same
+    # lock before committing new work, so nothing slips in between the
+    # drain observing an empty table and the session being popped.
+    draining: bool = False
 
 
 @dataclasses.dataclass
@@ -326,6 +331,15 @@ class AlchemistEngine:
         self._session_ids = itertools.count(1)
         self._clock = itertools.count(1)
         self._state_lock = locktrace.make_rlock("engine.state")
+        # Lifecycle monitor (repro.analysis.statemachine): bound once at
+        # construction, no-op unless REPRO_STM_TRACE=1. Keys are
+        # domain-qualified with this engine's identity so concurrent
+        # engines in one test process never collide.
+        self._stm = statemachine.tracer()
+        self._stm_dom = id(self)
+        if self._stm.enabled:
+            self._stm.mint("session", (self._stm_dom, SYSTEM_SESSION),
+                           site="__init__")
         # ---- multi-tenant QoS (core/qos) ----
         # Default OFF: a plain engine keeps the scheduler's FIFO dispatch
         # bit-for-bit (FifoReadyQueue) and admits everything. With
@@ -352,6 +366,7 @@ class AlchemistEngine:
         self.scheduler = scheduling.TaskScheduler(
             num_workers=scheduler_workers, on_finish=self._record_task,
             policy=self._qos_policy)
+        self.scheduler._stm_domain = self._stm_dom
 
     # ---- session lifecycle (the connect/disconnect handshake, §3.1.1) ----
     def connect(self, client: str = "") -> Session:
@@ -359,18 +374,50 @@ class AlchemistEngine:
         with self._state_lock:
             sess = Session(id=next(self._session_ids), client=client)
             self._sessions[sess.id] = sess
+            if self._stm.enabled:
+                self._stm.mint("session", (self._stm_dom, sess.id),
+                               site="connect")
+                self._stm.mint("reservation", (self._stm_dom, sess.id),
+                               site="connect",
+                               scope=(self._stm_dom, sess.id))
             return sess
 
     def disconnect(self, session: int) -> None:
         """Tear down a session: drain its in-flight tasks (teardown must
         not race a routine still resolving this namespace), reclaim its
         handles and retained task results, forget it. Unfetched futures
-        of a stopped context are therefore gone — fetch before stop."""
+        of a stopped context are therefore gone — fetch before stop.
+
+        Two-phase: the session is first marked ``draining`` under the
+        state lock, *then* drained. ``submit`` re-validates under the
+        same lock before minting a task, so a submission racing this
+        teardown either lands before the drain (and is waited for) or is
+        rejected — it can no longer slip into the table after
+        ``wait_session`` observed it empty and execute against a freed
+        namespace."""
+        with self._state_lock:
+            sess = self._sessions.get(session)
+            if sess is None:
+                return                      # already gone: idempotent
+            if not sess.draining:
+                sess.draining = True
+                if self._stm.enabled and session != SYSTEM_SESSION:
+                    self._stm.note("session", (self._stm_dom, session),
+                                   "DRAINING", site="disconnect")
         self.scheduler.wait_session(session)
+        popped = False
         with self._state_lock:
             self.free_session(session)
             if session != SYSTEM_SESSION:
-                self._sessions.pop(session, None)
+                popped = self._sessions.pop(session, None) is not None
+            if popped and self._stm.enabled:
+                # reservation first: the session's terminal transition
+                # runs the cross-machine scope checks, and by then the
+                # reserved-bytes row must already be declared released
+                self._stm.note("reservation", (self._stm_dom, session),
+                               "RELEASED", site="disconnect")
+                self._stm.note("session", (self._stm_dom, session),
+                               "FORGOTTEN", site="disconnect")
         self.scheduler.forget_session(session)
         if self.admission is not None:
             # a client that vanished while throttled must not leak its
@@ -420,6 +467,13 @@ class AlchemistEngine:
                 sess.owned.clear()
                 if sid != SYSTEM_SESSION:
                     del self._sessions[sid]
+                    if self._stm.enabled:
+                        self._stm.note("session", (self._stm_dom, sid),
+                                       "FORGOTTEN", site="shutdown")
+            if self._stm.enabled:
+                for store_id in self._stores:
+                    self._stm.note("store", (self._stm_dom, store_id),
+                                   "RECLAIMED", site="shutdown")
             self._entries.clear()
             self._stores.clear()
             self._by_fingerprint.clear()
@@ -544,13 +598,11 @@ class AlchemistEngine:
                     "the system session cannot be configured; connect() "
                     "a session first")
             sess = self.session(cfg.session)     # raises if unknown
-            supported = {"backend", "fusion", "bucketing", "warmup",
-                         "cache_dir", "weight", "quotas"}
-            unknown = sorted(set(cfg.options) - supported)
+            unknown = sorted(set(cfg.options) - configopts.SUPPORTED)
             if unknown:
                 raise ValueError(
                     f"unknown configure option(s) {unknown}; supported: "
-                    f"{', '.join(sorted(supported))}")
+                    f"{', '.join(sorted(configopts.SUPPORTED))}")
             # validate every option BEFORE mutating anything: a request
             # that errors must not half-apply (the client treats an
             # error reply as "nothing changed")
@@ -587,7 +639,7 @@ class AlchemistEngine:
                 raise TypeError(
                     "configure option 'cache_dir' must be a str path")
             quotas = None
-            if "weight" in cfg.options or "quotas" in cfg.options:
+            if any(o in cfg.options for o in configopts.QOS_OPTIONS):
                 if not self.qos_enabled:
                     raise ValueError(
                         "QoS is disabled on this engine; construct it "
@@ -944,13 +996,45 @@ class AlchemistEngine:
         off."""
         if self.admission is None:
             return None
-        return self.admission.reserve_upload(
+        denial = self.admission.reserve_upload(
             session, nbytes, weight=self._session_weight(session))
+        if denial is not None:
+            return denial
+        # The reservation itself can race disconnect: admission says yes,
+        # then teardown's forget_session() wipes the row — and this late
+        # reservation would re-create it and leak its bytes forever
+        # (nothing will ever commit or abort the stream of a gone
+        # client). Re-check liveness under the state lock — disconnect
+        # marks the session draining under the same lock before it
+        # reclaims anything — and compensate by releasing what was just
+        # reserved (a release on an already-forgotten row is a clamped
+        # no-op, so both orderings of the race end with zero held bytes).
+        with self._state_lock:
+            sess = self._sessions.get(session)
+            live = sess is not None and not sess.draining
+            if live and self._stm.enabled:
+                self._stm.note("reservation", (self._stm_dom, session),
+                               "ACTIVE", site="reserve_upload")
+        if not live:
+            self.admission.release_upload(session, nbytes)
+            return (f"session #{session} is disconnecting", 0.0)
+        return None
 
     def release_upload(self, session: int, nbytes: int) -> None:
         """Release an upload reservation (commit, abort, teardown)."""
         if self.admission is not None:
             self.admission.release_upload(session, nbytes)
+            if self._stm.enabled:
+                with self._state_lock:
+                    # skip once disconnect declared the row RELEASED —
+                    # this release is then the upload path returning
+                    # bytes forget_session() already reclaimed
+                    if session in self._sessions:
+                        left = self.admission.inflight_bytes(session)
+                        self._stm.note(
+                            "reservation", (self._stm_dom, session),
+                            "ACTIVE" if left > 0 else "IDLE",
+                            site="release_upload")
 
     def _qos_yield(self, session: int) -> None:
         """Iteration-boundary hook body installed on worker threads
@@ -1009,6 +1093,9 @@ class AlchemistEngine:
                 sharding=getattr(array, "sharding", None),
                 layout=lay)
             self._by_fingerprint.setdefault(fp, store_id)
+            if self._stm.enabled:
+                self._stm.mint("store", (self._stm_dom, store_id),
+                               site="put")
             self._entries[handle.id] = _Entry(store=store_id,
                                               session=session)
             sess.owned.add(handle.id)
@@ -1030,6 +1117,9 @@ class AlchemistEngine:
                     store.host, store.sharding) if store.sharding is not None \
                     else jax.device_put(store.host)
                 store.host = None
+                if self._stm.enabled:
+                    self._stm.note("store", (self._stm_dom, entry.store),
+                                   "LIVE", site="get")
                 self._enforce_budget(keep=entry.store)
             return store.array
 
@@ -1072,15 +1162,22 @@ class AlchemistEngine:
                     fingerprint=fp, last_use=next(self._clock),
                     sharding=getattr(array, "sharding", None),
                     layout=lay)
+                if self._stm.enabled:
+                    self._stm.mint("store", (self._stm_dom, store_id),
+                                   site="overwrite")
                 entry.store = store_id
                 self._enforce_budget(keep=store_id)
             else:
                 if self._by_fingerprint.get(store.fingerprint) == \
                         entry.store:
                     del self._by_fingerprint[store.fingerprint]
+                was_spilled = store.array is None
                 store.fingerprint = fp
                 store.array = array
                 store.host = None
+                if was_spilled and self._stm.enabled:
+                    self._stm.note("store", (self._stm_dom, entry.store),
+                                   "LIVE", site="overwrite")
                 store.sharding = getattr(array, "sharding", store.sharding)
                 store.layout = lay
                 store.last_use = next(self._clock)
@@ -1206,6 +1303,9 @@ class AlchemistEngine:
         if store is not None:
             store.refs -= 1
             if store.refs <= 0:
+                if self._stm.enabled:
+                    self._stm.note("store", (self._stm_dom, entry.store),
+                                   "RECLAIMED", site="_drop_binding")
                 del self._stores[entry.store]
                 if self._by_fingerprint.get(store.fingerprint) == \
                         entry.store:
@@ -1231,6 +1331,9 @@ class AlchemistEngine:
                 break
             store.host = np.asarray(store.array)
             store.array = None
+            if self._stm.enabled:
+                self._stm.note("store", (self._stm_dom, sid),
+                               "SPILLED", site="_enforce_budget")
             total -= store.nbytes
 
     # ---- content-addressed routine memoization (core/cache.py) ----
@@ -1325,7 +1428,12 @@ class AlchemistEngine:
         values = self._deliver_cached(entry, cmd.session)
         self.cache_log.record(cmd.session, f"{cmd.library}.{cmd.routine}",
                               "hit", saved_s=entry.exec_s)
-        self._sessions[cmd.session].commands += 1
+        # .get, not []: the session may have disconnected between the
+        # caller's liveness check and this hit being served — a stale
+        # hit is harmless, a KeyError here kills the submit endpoint
+        sess = self._sessions.get(cmd.session)
+        if sess is not None:
+            sess.commands += 1
         return protocol.Result(values=values, session=cmd.session,
                                state=state, cache_hit=True,
                                saved_s=entry.exec_s)
@@ -1557,11 +1665,26 @@ class AlchemistEngine:
                     session=cmd.session, retry_after_s=retry))
         barrier = cmd.library == ENGINE_LIBRARY
         try:
-            task = self.scheduler.submit(
-                lambda t, c=cmd: self._run_task(c, t), session=cmd.session,
-                reads=reads, writes=writes, data_deps=data_deps,
-                barrier=barrier, label=f"{cmd.library}.{cmd.routine}",
-                payload=cmd, price=price)
+            # Re-validate liveness under the state lock, held across the
+            # task mint: the unlocked session() check above can race
+            # disconnect, and a task minted after its drain observed an
+            # empty table would execute against a freed namespace.
+            # disconnect flips ``draining`` under this same lock before
+            # it drains, which closes the window (engine.state ->
+            # scheduler.cv is the documented lock order).
+            with self._state_lock:
+                sess = self._sessions.get(cmd.session)
+                if sess is None or sess.draining:
+                    raise UnknownSession(
+                        f"session #{cmd.session} is not connected to "
+                        "this engine")
+                task = self.scheduler.submit(
+                    lambda t, c=cmd: self._run_task(c, t),
+                    session=cmd.session,
+                    reads=reads, writes=writes, data_deps=data_deps,
+                    barrier=barrier,
+                    label=f"{cmd.library}.{cmd.routine}",
+                    payload=cmd, price=price)
         except Exception as e:   # e.g. scheduler shut down: stay on-wire
             return protocol.encode_result(protocol.Result(
                 values={}, error=f"{type(e).__name__}: {e}",

@@ -117,10 +117,15 @@ class Configure:
     (bool; opt this session in/out of operand shape bucketing),
     ``warmup`` (True, or a list of bucket sizes: AOT-compile the
     bucketable catalog + indexed hot signatures now, off the request
-    path), and ``cache_dir`` (str; engine-wide persistent compile cache
-    directory — see ``core/compilecache.py``). The engine validates
-    every option and echoes the effective settings; unknown option keys
-    are rejected — a typo must not silently configure nothing."""
+    path), ``cache_dir`` (str; engine-wide persistent compile cache
+    directory — see ``core/compilecache.py``), and — on QoS-enabled
+    engines only — ``weight`` (positive number; this tenant's
+    fair-share dispatch weight) and ``quotas`` (dict; per-session
+    admission quota overrides). The full option table lives in
+    ``core/configopts.py`` (the CFG001 rule keeps every surface in
+    sync with it). The engine validates every option and echoes the
+    effective settings; unknown option keys are rejected — a typo must
+    not silently configure nothing."""
     session: int
     options: dict[str, Any] = dataclasses.field(default_factory=dict)
 

@@ -49,7 +49,7 @@ import threading
 import time
 from typing import Any, Callable, Iterable, Optional
 
-from repro.analysis import locktrace
+from repro.analysis import locktrace, statemachine
 from repro.core.qos.policy import FifoReadyQueue
 
 QUEUED = "QUEUED"
@@ -139,6 +139,12 @@ class TaskScheduler:
         self._threads: list[threading.Thread] = []
         self._finished: collections.deque[Task] = collections.deque()
         self._cb_lock = locktrace.make_lock("scheduler.delivery")
+        # Lifecycle monitor (repro.analysis.statemachine): bound once at
+        # construction, no-op unless REPRO_STM_TRACE=1. The owning engine
+        # overwrites _stm_domain with its own identity so two engines in
+        # one process never collide in the monitor's key space.
+        self._stm = statemachine.tracer()
+        self._stm_domain: int = 0
         self._shutdown = False
         self._paused = False
         self._running = 0
@@ -202,6 +208,10 @@ class TaskScheduler:
             deps.discard(task.id)
 
             self._tasks[task.id] = task
+            if self._stm.enabled:
+                self._stm.mint("task", (self._stm_domain, task.id),
+                               site="submit",
+                               scope=(self._stm_domain, session))
             self._session_tail[session] = task.id
             task.deps = len(deps)
             task.dep_ids = tuple(sorted(deps))
@@ -256,6 +266,9 @@ class TaskScheduler:
                 dep = self._tasks.get(d)
                 if dep is not None and dep.state in (QUEUED, RUNNING):
                     return False
+            if self._stm.enabled:
+                self._stm.note("task", (self._stm_domain, task_id),
+                               "RELEASED", site="release")
             del self._tasks[task_id]
             if self._session_tail.get(t.session) == task_id:
                 self._session_tail.pop(t.session, None)
@@ -271,6 +284,9 @@ class TaskScheduler:
             gone = [tid for tid, t in self._tasks.items()
                     if t.session == session and t.state in (DONE, FAILED)]
             for tid in gone:
+                if self._stm.enabled:
+                    self._stm.note("task", (self._stm_domain, tid),
+                                   "RELEASED", site="forget_session")
                 del self._tasks[tid]
             if self._session_tail.get(session) is not None and \
                     self._session_tail[session] not in self._tasks:
@@ -365,6 +381,9 @@ class TaskScheduler:
                     break
                 now = time.perf_counter()
                 nxt.state = RUNNING
+                if self._stm.enabled:
+                    self._stm.note("task", (self._stm_domain, nxt.id),
+                                   RUNNING, site="claim_chain")
                 nxt.started_at = now
                 nxt.wait_s = now - nxt.submitted_at
                 chain.append(nxt)
@@ -468,6 +487,9 @@ class TaskScheduler:
             for t in self._tasks.values():
                 if t.state == QUEUED:
                     t.state = FAILED
+                    if self._stm.enabled:
+                        self._stm.note("task", (self._stm_domain, t.id),
+                                       FAILED, site="shutdown")
                     t.error = "scheduler shut down"
                     t.finished_at = time.perf_counter()
             self._ready.clear()
@@ -495,6 +517,9 @@ class TaskScheduler:
                     return
                 task = self._tasks[self._ready.pop()]
                 task.state = RUNNING
+                if self._stm.enabled:
+                    self._stm.note("task", (self._stm_domain, task.id),
+                                   RUNNING, site="_worker")
                 task.started_at = time.perf_counter()
                 task.wait_s = task.started_at - task.submitted_at
                 self._running += 1
@@ -527,6 +552,9 @@ class TaskScheduler:
             task.finished_at = time.perf_counter()
             task.exec_s = task.finished_at - task.started_at
             task.state = state
+            if self._stm.enabled:
+                self._stm.note("task", (self._stm_domain, task.id),
+                               state, site="_finish")
             task.result = result
             task.error = error
             # fair-share reconciliation: measured exec_s vs the price

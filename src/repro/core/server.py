@@ -41,7 +41,7 @@ import jax
 import msgpack
 import numpy as np
 
-from repro.analysis import locktrace
+from repro.analysis import locktrace, statemachine
 from repro.core import protocol, transfer, wire
 from repro.core.costmodel import WireLog
 from repro.core.engine import SYSTEM_SESSION, AlchemistEngine, \
@@ -87,6 +87,9 @@ class _Connection:
         self.uploads: dict[int, _Upload] = {}
         self._upload_ids = itertools.count(1)
         self._send_lock = locktrace.make_lock("server.send")
+        # lifecycle monitor: upload streams are keyed per-connection
+        # (only this connection's reader thread ever touches them)
+        self._stm = statemachine.tracer()
         self.thread = threading.Thread(
             target=self._run, daemon=True,
             name=f"alchemist-conn-{next(self._ids)}")
@@ -149,9 +152,12 @@ class _Connection:
                 return                      # peer vanished mid-reply
 
     def _teardown(self) -> None:
-        for up in self.uploads.values():
+        for uid, up in self.uploads.items():
             # a vanished client's half-streamed uploads release their
             # in-flight quota reservations before the data is discarded
+            if self._stm.enabled:
+                self._stm.note("upload", (id(self), uid), "ABORTED",
+                               site="_teardown")
             if up.reserved:
                 try:
                     self.engine.release_upload(up.session, up.reserved)
@@ -240,8 +246,15 @@ class _Connection:
 
     def _do_handshake(self, payload: bytes) -> None:
         try:
-            reply = self.engine.handshake(payload)
             hs = protocol.decode_handshake(payload)
+            if hs.action == protocol.DISCONNECT:
+                # a client may ask to disconnect with uploads still open
+                # on this connection: abort them (returning their
+                # reserved bytes) BEFORE the engine forgets the session,
+                # exactly as the vanished-client teardown would — a
+                # stream whose session is gone can never commit anyway
+                self._abort_session_uploads(hs.session)
+            reply = self.engine.handshake(payload)
             res = protocol.decode_result(reply)
             if not res.error:
                 if hs.action == protocol.CONNECT:
@@ -251,6 +264,21 @@ class _Connection:
         except Exception as e:
             reply = _error_result(0, e)
         self._send_result("handshake", reply)
+
+    def _abort_session_uploads(self, session: int) -> None:
+        """Abort every open upload stream staged for ``session`` on this
+        connection, releasing its in-flight quota reservation."""
+        for uid in [u for u, up in self.uploads.items()
+                    if up.session == session]:
+            up = self.uploads.pop(uid)
+            if self._stm.enabled:
+                self._stm.note("upload", (id(self), uid), "ABORTED",
+                               site="_abort_session_uploads")
+            if up.reserved:
+                try:
+                    self.engine.release_upload(up.session, up.reserved)
+                except Exception:
+                    pass                    # engine already shut down
 
     def _do_free(self, payload: bytes) -> None:
         try:
@@ -314,6 +342,10 @@ class _Connection:
                 session=d["session"], name=d.get("name"),
                 num_chunks=d["num_chunks"], single=d.get("single", False),
                 wire_bytes=frame_len, reserved=nbytes)
+            if self._stm.enabled:
+                self._stm.mint(
+                    "upload", (id(self), uid), site="_do_upload_begin",
+                    scope=(self.engine._stm_dom, d["session"]))
             reply = protocol.encode_result(protocol.Result(
                 values={"upload": uid}, session=d["session"]))
         except Exception as e:
@@ -346,11 +378,14 @@ class _Connection:
 
     def _do_upload_commit(self, payload: bytes, frame_len: int) -> None:
         session = 0
+        uid = None
+        up = None
         try:
             d = msgpack.unpackb(payload)
-            up = self.uploads.pop(d["upload"], None)
+            uid = d["upload"]
+            up = self.uploads.pop(uid, None)
             if up is None:
-                raise KeyError(f"unknown upload #{d['upload']}")
+                raise KeyError(f"unknown upload #{uid}")
             if up.reserved:
                 # the transfer is no longer in flight either way: the
                 # commit below turns it into resident handle memory
@@ -388,7 +423,13 @@ class _Connection:
                 values={"handle": handle,
                         "record": dataclasses.asdict(rec)},
                 session=session))
+            if self._stm.enabled:
+                self._stm.note("upload", (id(self), uid), "COMMITTED",
+                               site="_do_upload_commit")
         except Exception as e:
+            if up is not None and self._stm.enabled:
+                self._stm.note("upload", (id(self), uid), "ABORTED",
+                               site="_do_upload_commit")
             reply = _error_result(session, e)
         self._send_result("upload", reply)
 

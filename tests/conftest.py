@@ -28,6 +28,32 @@ def pytest_generate_tests(metafunc):
                              indirect=True)
 
 
+# ---- lifecycle state-machine monitoring -------------------------------
+# The suites that exercise teardown races and QoS backpressure run with
+# the repro.analysis.statemachine runtime monitor armed: every engine/
+# scheduler/server constructed inside them records lifecycle transitions,
+# and the test fails if any illegal edge, orphan, remint, or dead-scope
+# activity was observed — on both bridges (the socket variant drives the
+# real server's upload machine too).
+_STM_MONITORED_SUITES = {
+    "test_server_faults",
+    "test_qos",
+}
+
+
+@pytest.fixture(autouse=True)
+def stm_monitor(request, monkeypatch):
+    if request.module.__name__ not in _STM_MONITORED_SUITES:
+        yield
+        return
+    from repro.analysis import statemachine
+    monkeypatch.setenv(statemachine.ENV_FLAG, "1")
+    statemachine.TRACE.reset()
+    yield
+    statemachine.TRACE.assert_clean()
+    statemachine.TRACE.reset()
+
+
 @pytest.fixture(autouse=True)
 def bridge_mode(request, monkeypatch):
     """``inmemory`` leaves everything untouched. ``socket`` reroutes

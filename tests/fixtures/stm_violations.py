@@ -1,0 +1,26 @@
+"""Deliberately-broken lifecycle module exercised by
+tests/test_analysis.py (parsed as source against a crafted Machine
+spec, never imported — like analysis_violations.py).
+
+The crafted ``fx`` machine declares: guarded field ``_rows`` owned by
+``self._lk``, mint site ``open_row``, edge OPEN->CLOSED at
+``close_row`` (which is obligated to call ``unhook``), and a declared
+site ``ghost_site`` that does not exist below. Each construct violates
+exactly one STM rule; the test asserts each fires *here* and stays
+quiet on the real tree.
+"""
+
+
+class BrokenFx:
+    def open_row(self, k):
+        with self._lk:
+            self._rows[k] = "OPEN"          # declared site, locked: clean
+
+    def close_row(self, k):
+        self._rows.pop(k)                   # STM003: outside self._lk
+        # STM004: never calls the obligated unhook()
+
+    def rogue_drop(self, k):
+        with self._lk:
+            del self._rows[k]               # STM001: undeclared site
+# STM002: the spec's ghost_site has no function here

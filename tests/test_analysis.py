@@ -27,8 +27,12 @@ from repro.analysis import locktrace, run_all_rules
 from repro.analysis import findings as F
 from repro.analysis.__main__ import main as analysis_main
 from repro.analysis.rules_catalog import check_catalog_parity
+from repro.analysis.rules_config import check_config_surface
 from repro.analysis.rules_source import (
-    check_lock_discipline, check_no_pickle, check_trace_purity)
+    check_lock_discipline, check_lock_ranks, check_no_pickle,
+    check_trace_purity)
+from repro.analysis.rules_stm import check_statemachines
+from repro.analysis.statemachine import Edge, Machine, Obligation
 from repro.analysis.rules_wire import (
     check_bridge_parity, check_wire_exhaustiveness)
 from repro.core.backends.base import ExecutionBackend
@@ -250,6 +254,124 @@ def test_source_rules_quiet_on_real_tree():
 
 
 # =====================================================================
+# STM — state-machine conformance, against a crafted spec + fixture
+# =====================================================================
+_FX_MACHINE = Machine(
+    name="fx", subject="fixture row",
+    modules=("stm_violations.py",),
+    guarded=("_rows",),
+    states=("OPEN", "CLOSED"), initial="OPEN", terminal=("CLOSED",),
+    lock="fx.lock", lockattr="_lk",
+    mint_sites=("open_row",),
+    edges=(Edge("OPEN", "CLOSED", "close_row"),),
+    extra_sites=("ghost_site",),            # STM002: does not exist
+    obligations=(Obligation("close_row", ("unhook",),
+                            "closed rows must unhook their watchers"),),
+)
+
+
+def test_stm_rules_fire_on_violating_fixture():
+    found = check_statemachines(machines=(_FX_MACHINE,),
+                                root=os.path.dirname(FIXTURE))
+    by_rule = {}
+    for f in found:
+        by_rule.setdefault(f.rule, []).append(f.symbol)
+    assert by_rule["STM001"] == ["fx.rogue_drop._rows"]
+    assert by_rule["STM002"] == ["fx.ghost_site"]
+    assert by_rule["STM003"] == ["fx.close_row._rows"]
+    assert by_rule["STM004"] == ["fx.close_row.unhook"]
+    assert len(found) == 4                  # open_row is clean
+
+
+def test_stm_quiet_on_real_tree():
+    assert check_statemachines() == []
+
+
+# =====================================================================
+# CFG001 — configure-surface parity, against crafted drifted surfaces
+# =====================================================================
+def test_cfg001_fires_on_every_drifted_surface(tmp_path):
+    (tmp_path / "engine.py").write_text(
+        "class E:\n"
+        "    def configure(self, opts):\n"
+        "        allowed = {'warmup'}      # literal set, not the registry\n"
+        "        return allowed\n")
+    (tmp_path / "protocol.py").write_text(
+        "class Configure:\n"
+        "    '''Session configure frame. Mentions no options at all.'''\n")
+    (tmp_path / "context.py").write_text(
+        "class C:\n"
+        "    def configure(self, warmup=None, bogus=None):\n"
+        "        pass\n")
+    (tmp_path / "server.py").write_text(
+        "def build_parser(ap):\n"
+        "    return ap                     # defines no flags\n")
+    opts = [types.SimpleNamespace(name="warmup", cli="--warmup")]
+    found = check_config_surface(
+        options=opts,
+        engine_path=str(tmp_path / "engine.py"),
+        protocol_path=str(tmp_path / "protocol.py"),
+        context_path=str(tmp_path / "context.py"),
+        server_path=str(tmp_path / "server.py"))
+    assert all(f.rule == "CFG001" for f in found)
+    syms = {f.symbol for f in found}
+    assert syms == {
+        "engine.configure:SUPPORTED",       # no registry reference
+        "engine.configure:QOS_OPTIONS",     # no QoS gating reference
+        "protocol.Configure:warmup",        # docstring omits the option
+        "context.configure:bogus",          # unregistered client kwarg
+        "server.cli:warmup",                # declared flag undefined
+    }
+
+
+def test_cfg001_quiet_on_real_tree():
+    assert check_config_surface() == []
+
+
+# =====================================================================
+# LCK002 — rank uniqueness + docs↔code rank-table parity
+# =====================================================================
+def _rank_doc(tmp_path, rows):
+    doc = tmp_path / "architecture.md"
+    table = "\n".join(f"| {r} | `{n}` | prose |" for n, r in rows)
+    doc.write_text("intro\n\n<!-- LOCK_RANK_TABLE_BEGIN -->\n"
+                   "| rank | lock | held by |\n|---|---|---|\n"
+                   + table + "\n<!-- LOCK_RANK_TABLE_END -->\n")
+    return str(doc)
+
+
+def test_lck002_duplicate_ranks(tmp_path):
+    doc = _rank_doc(tmp_path, [("a.x", 10), ("b.y", 10)])
+    found = check_lock_ranks(ranks={"a.x": 10, "b.y": 10}, doc_path=doc)
+    assert [f.symbol for f in found] == ["rank-dup:10"]
+    assert "total order" in found[0].message
+
+
+def test_lck002_docs_drift_stale_and_missing_rows(tmp_path):
+    doc = _rank_doc(tmp_path, [("a.x", 11), ("c.z", 30)])
+    found = check_lock_ranks(ranks={"a.x": 10, "b.y": 20}, doc_path=doc)
+    assert {f.symbol for f in found} == {
+        "docs:undocumented:b.y",            # in code, not in docs
+        "docs:stale:c.z",                   # in docs, not in code
+        "docs:rank-drift:a.x",              # 11 documented != 10 coded
+    }
+
+
+def test_lck002_missing_markers_and_missing_doc(tmp_path):
+    bare = tmp_path / "bare.md"
+    bare.write_text("no table here\n")
+    found = check_lock_ranks(ranks={"a.x": 10}, doc_path=str(bare))
+    assert [f.symbol for f in found] == ["docs:rank-table-markers"]
+    found = check_lock_ranks(ranks={"a.x": 10},
+                             doc_path=str(tmp_path / "absent.md"))
+    assert [f.symbol for f in found] == ["docs:missing"]
+
+
+def test_lck002_quiet_on_real_tree():
+    assert check_lock_ranks() == []
+
+
+# =====================================================================
 # the gate: all rules + baseline mechanics + CLI exit codes
 # =====================================================================
 def test_run_all_rules_clean_on_real_tree():
@@ -274,9 +396,13 @@ def test_baseline_suppresses_and_ratchets(tmp_path):
     assert gate.ok and [f.fingerprint() for f in gate.suppressed] == \
         [live.fingerprint()] and gate.stale == []
 
-    # the finding stops firing -> its suppression turns stale (ratchet)
+    # the finding stops firing -> its suppression turns stale, which is
+    # a HARD failure (the ratchet's teeth): the fixed finding must take
+    # its baseline row with it
     gate = F.apply_baseline([], baseline)
-    assert gate.ok and gate.stale == [live.fingerprint()]
+    assert not gate.ok and gate.stale == [live.fingerprint()]
+    # ... unless the local escape hatch is explicit
+    assert F.apply_baseline([], baseline, allow_stale=True).ok
 
     # a new, unbaselined finding fails the gate
     fresh = F.Finding("CAT002", "src/repro/core/b.py", 2, "o.r", "m")
@@ -286,6 +412,28 @@ def test_baseline_suppresses_and_ratchets(tmp_path):
 def test_cli_static_gate_is_clean(capsys):
     assert analysis_main([]) == 0
     assert "repro.analysis: clean" in capsys.readouterr().out
+
+
+def test_cli_stale_suppression_hard_fails_without_allow_stale(
+        tmp_path, capsys):
+    """The real tree is clean, so any baselined fingerprint is stale:
+    the gate must fail on it, name it, and pass with --allow-stale."""
+    dead = F.Finding("CAT001", "src/repro/core/a.py", 1, "gone.r", "m")
+    path = str(tmp_path / "baseline.json")
+    F.write_baseline([dead], path, reason="fixed long ago")
+
+    assert analysis_main(["--baseline", path]) == 1
+    out = capsys.readouterr().out
+    assert "stale suppression" in out and dead.fingerprint() in out
+    assert "--allow-stale" in out        # the message names the hatch
+
+    assert analysis_main(["--baseline", path, "--allow-stale"]) == 0
+    assert "1 stale suppression(s)" in capsys.readouterr().out
+
+    assert analysis_main(["--baseline", path, "--json"]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["ok"] is False and payload["new"] == []
+    assert payload["stale_suppressions"] == [dead.fingerprint()]
 
 
 def test_cli_json_mode(capsys):

@@ -1,0 +1,248 @@
+"""The deterministic interleaving explorer, end to end.
+
+Four claims, each load-bearing:
+
+* **it finds bugs** — the sweep over ``fixture_injected`` (a seeded
+  release-vs-finish race) discovers the violating schedules;
+* **it replays them** — re-running a discovered schedule reproduces the
+  identical violations, twice, byte for byte (the determinism the
+  ``--replay`` workflow depends on);
+* **the real windows are closed** — bounded sweeps over the scheduler,
+  submit-vs-disconnect, and reservation-vs-disconnect scenarios complete
+  with zero monitor violations and zero failed post-conditions;
+* **the oracle has teeth** — reverting ``engine.reserve_upload`` to its
+  pre-fix shape (grant without the liveness re-check) makes the same
+  sweep fail with the illegal RELEASED→ACTIVE edge, reproducibly.
+
+Plus direct, schedule-free regressions for the two races the explorer
+found, pinned at the exact historical window via the same hooks the
+scenarios use.
+"""
+import numpy as np
+import pytest
+
+from repro.analysis import explore, statemachine
+from repro.analysis.explore import next_schedule, run_schedule, sweep
+
+
+# =====================================================================
+# DFS mechanics
+# =====================================================================
+def test_next_schedule_bumps_deepest_untried_branch():
+    assert next_schedule([(0, 2), (0, 1), (0, 3)]) == [0, 0, 1]
+    assert next_schedule([(0, 2), (2, 3)]) == [0] * 0 + [1]  # deepest done
+    assert next_schedule([(1, 2), (2, 3)]) is None           # exhausted
+    assert next_schedule([(0, 1)]) is None                   # no branching
+    assert next_schedule([]) is None
+
+
+def test_controller_choice_order_is_seed_stable():
+    """Same seed => same parked-thread ordering; the recorded choices of
+    two identical runs must match exactly."""
+    a = run_schedule("fixture_injected", seed=3, schedule=[])
+    b = run_schedule("fixture_injected", seed=3, schedule=[])
+    assert a["choices"] == b["choices"] and a["trail"] == b["trail"]
+
+
+# =====================================================================
+# the explorer's own teeth: the seeded fixture bug
+# =====================================================================
+def test_sweep_finds_the_injected_fixture_bug():
+    rep = sweep("fixture_injected", seed=0, max_schedules=32)
+    assert rep["exhausted"] and rep["wedged"] == 0
+    assert rep["violating_schedules"], "the seeded bug went undetected"
+    assert rep["ok"]                      # expect == "violation"
+    kinds = {v["kind"] for r in rep["results"] for v in r["violations"]}
+    assert "illegal-edge" in kinds
+
+
+def test_replay_reproduces_identical_violations():
+    rep = sweep("fixture_injected", seed=0, max_schedules=32)
+    schedule = rep["violating_schedules"][0]
+    runs = [run_schedule("fixture_injected", seed=0, schedule=schedule)
+            for _ in range(2)]
+    assert runs[0]["violations"], "replayed schedule lost the violation"
+    assert runs[0]["violations"] == runs[1]["violations"]
+    assert runs[0]["trail"] == runs[1]["trail"]
+    # and a different seed renumbers choices but the bug is still found
+    rep2 = sweep("fixture_injected", seed=17, max_schedules=32)
+    assert rep2["violating_schedules"] and rep2["ok"]
+
+
+def test_cli_sweep_and_replay_roundtrip(tmp_path, capsys):
+    out = tmp_path / "report.json"
+    assert explore.main(["--scenario", "fixture_injected",
+                         "--schedules", "32",
+                         "--json", str(out)]) == 0
+    text = capsys.readouterr().out
+    assert "violating" in text and out.exists()
+    # replay the first printed schedule and expect the violation again
+    line = next(l for l in text.splitlines() if "--replay" in l)
+    sched = line.split("--replay", 1)[1].strip()
+    assert explore.main(["--scenario", "fixture_injected",
+                         "--replay", sched]) == 0
+    assert "illegal-edge" in capsys.readouterr().out
+
+
+# =====================================================================
+# the real race windows sweep clean on the fixed engine
+# =====================================================================
+@pytest.mark.parametrize("scenario,budget", [
+    ("submit_vs_release", 8),
+    ("claim_chain_vs_hazard", 12),
+    ("disconnect_vs_midtask", 20),
+    ("throttle_release_vs_commit", 30),
+])
+def test_real_window_sweeps_are_clean(scenario, budget):
+    rep = sweep(scenario, seed=0, max_schedules=budget)
+    assert rep["ok"], (rep["violating_schedules"], rep["failed_checks"])
+    assert rep["violating_schedules"] == []
+    assert rep["failed_checks"] == []
+    assert rep["wedged"] < rep["schedules_run"]   # not all wedged
+
+
+# =====================================================================
+# oracle teeth on a real engine: revert the fix, the sweep must fail
+# =====================================================================
+def test_sweep_catches_prefix_reservation_race(monkeypatch):
+    """``engine.reserve_upload`` without the locked liveness re-check
+    (the pre-fix shape: grant, note, return) lets a disconnect landing
+    inside the admission window revive the forgotten session's
+    reservation row. The throttle sweep must catch it — as the illegal
+    RELEASED→ACTIVE edge — and the failing schedule must replay."""
+    from repro.core.engine import AlchemistEngine
+
+    def naive_reserve(self, session, nbytes):
+        if self.admission is None:
+            return None
+        denial = self.admission.reserve_upload(
+            session, nbytes, weight=self._session_weight(session))
+        if denial is None and self._stm.enabled:
+            self._stm.note("reservation", (self._stm_dom, session),
+                           "ACTIVE", site="reserve_upload")
+        return denial
+
+    monkeypatch.setattr(AlchemistEngine, "reserve_upload", naive_reserve)
+    rep = sweep("throttle_release_vs_commit", seed=0, max_schedules=30)
+    assert not rep["ok"], "sweep failed to catch the reverted fix"
+    assert rep["violating_schedules"]
+    kinds = {v["kind"] for r in rep["results"] for v in r["violations"]}
+    assert "illegal-edge" in kinds
+    # deterministic replay of the discovered bug
+    res = run_schedule("throttle_release_vs_commit", seed=0,
+                       schedule=rep["violating_schedules"][0])
+    assert any(v["kind"] == "illegal-edge" and
+               "RELEASED -> ACTIVE" in v["detail"]
+               for v in res["violations"]), res["violations"]
+
+
+# =====================================================================
+# direct regressions for the two races the explorer found
+# =====================================================================
+def _engine(**kw):
+    from repro.core.engine import AlchemistEngine
+    kw.setdefault("scheduler_workers", 1)
+    kw.setdefault("cache_entries", 0)
+    return AlchemistEngine(**kw)
+
+
+def test_submit_rejects_disconnect_inside_the_window(monkeypatch):
+    """Race fix 1, pinned: disconnect completing between submit's
+    unlocked session check and the task mint must yield a clean
+    UnknownSession error on the wire — no task minted into the freed
+    namespace."""
+    from repro.core import protocol as P
+    from repro.core.engine import ENGINE_LIBRARY
+    monkeypatch.setenv(statemachine.ENV_FLAG, "1")
+    statemachine.TRACE.reset()
+    eng = _engine(qos=True)
+    try:
+        sess = eng.connect("victim")
+        real_hazards = eng._hazards
+
+        def hazards_then_disconnect(cmd):
+            res = real_hazards(cmd)
+            eng.disconnect(sess.id)     # lands exactly in the window
+            return res
+        eng._hazards = hazards_then_disconnect
+
+        cmd = P.Command(library=ENGINE_LIBRARY, routine="qos_stats",
+                        session=sess.id, args={})
+        r = P.decode_result(eng.submit(P.encode_command(cmd)))
+        assert r.error and "UnknownSession" in r.error
+        assert not r.task
+        assert sess.id not in eng._sessions
+        assert eng.scheduler.session_depth(sess.id) == 0
+    finally:
+        eng.shutdown()
+    statemachine.TRACE.assert_clean()
+    statemachine.TRACE.reset()
+
+
+def test_reserve_upload_compensates_when_session_vanishes(monkeypatch):
+    """Race fix 2, pinned: a disconnect landing between the admission
+    grant and the engine's liveness re-check must turn the grant into a
+    denial and leave zero in-flight bytes (the compensating release)."""
+    monkeypatch.setenv(statemachine.ENV_FLAG, "1")
+    statemachine.TRACE.reset()
+    eng = _engine(qos=True, qos_quotas={"max_inflight_bytes": 1 << 20})
+    try:
+        sess = eng.connect("vanisher")
+        real_reserve = eng.admission.reserve_upload
+
+        def reserve_then_disconnect(session, nbytes, weight=1.0):
+            res = real_reserve(session, nbytes, weight=weight)
+            eng.disconnect(sess.id)     # lands exactly in the window
+            return res
+        eng.admission.reserve_upload = reserve_then_disconnect
+
+        denial = eng.reserve_upload(sess.id, 4096)
+        assert denial is not None and "disconnecting" in denial[0]
+        assert eng.admission.inflight_bytes(sess.id) == 0
+        assert sess.id not in eng._sessions
+    finally:
+        eng.shutdown()
+    statemachine.TRACE.assert_clean()
+    statemachine.TRACE.reset()
+
+
+def test_server_aborts_open_uploads_on_client_disconnect(monkeypatch):
+    """Hardening pinned at the server layer: a handshake DISCONNECT with
+    a chunked upload still open aborts the stream and returns its
+    reserved bytes before the engine forgets the session — the monitor
+    sees OPEN → ABORTED, never an OPEN stream outliving its session."""
+    import msgpack
+    from repro.core import protocol, wire
+    from repro.core.server import AlchemistServer
+    monkeypatch.setenv(statemachine.ENV_FLAG, "1")
+    statemachine.TRACE.reset()
+    eng = _engine(qos=True, qos_quotas={"max_inflight_bytes": 1 << 20})
+    srv = AlchemistServer(engine=eng).start()
+    try:
+        bridge = wire.SocketBridge(srv.address)
+        reply = protocol.decode_result(bridge.handshake(
+            protocol.encode_handshake(protocol.Handshake(
+                action=protocol.CONNECT, client="aborter"))))
+        sid = reply.values["session"]
+        begin = msgpack.packb({"shape": [64, 8], "dtype": "float32",
+                               "session": sid, "name": "half-open",
+                               "num_chunks": 4, "single": False})
+        with bridge._lock:
+            bridge._send("upload", wire.FRAME_UPLOAD_BEGIN, begin)
+            _, raw = bridge._recv("upload")
+        uid = protocol.decode_result(raw).values["upload"]
+        chunk = np.ones((16, 8), np.float32)
+        bridge._send("upload", wire.FRAME_UPLOAD_CHUNK, msgpack.packb(
+            {"upload": uid, "seq": 0, "array": wire.pack_ndarray(chunk)}))
+        assert eng.admission.inflight_bytes(sid) > 0
+        # clean client-requested DISCONNECT while the stream is OPEN
+        bridge.handshake(protocol.encode_handshake(protocol.Handshake(
+            action=protocol.DISCONNECT, session=sid)))
+        assert eng.admission.inflight_bytes(sid) == 0
+        assert sid not in eng._sessions
+        bridge.close()
+    finally:
+        srv.stop()
+        eng.shutdown()
+    statemachine.TRACE.assert_clean()
+    statemachine.TRACE.reset()
